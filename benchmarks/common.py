@@ -1,0 +1,44 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+from repro.sim.driver import MultiTenantSim, SimConfig, SimResult
+from repro.sim.workloads import benchmark_models
+
+
+def mixed_tenants(n: int) -> list:
+    """n tenants cycling through the 8 paper models (paper IV-A4:
+    random dispatch over the model mix)."""
+    models = benchmark_models()
+    names = list(models)
+    return [models[names[i % len(names)]] for i in range(n)]
+
+
+def run_sim(tenants, sched: str, cfg: SimConfig = None,
+            dur: float = 0.25) -> SimResult:
+    sim = MultiTenantSim(tenants, sched, cfg)
+    return sim.run(duration_s=dur)
+
+
+def latency_by_model(res: SimResult) -> Dict[str, float]:
+    return res.avg_latency_by_model()
+
+
+def dram_by_model(res: SimResult) -> Dict[str, float]:
+    out: Dict[str, list] = {}
+    for t in res.tasks:
+        if t.inferences:
+            out.setdefault(t.model, []).append(t.dram_per_inference)
+    return {m: sum(v) / len(v) for m, v in out.items()}
+
+
+def timed(fn: Callable) -> Tuple[float, object]:
+    t0 = time.time()
+    out = fn()
+    return (time.time() - t0) * 1e6, out
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.0f},{derived}", flush=True)

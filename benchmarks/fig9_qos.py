@@ -1,0 +1,52 @@
+"""Fig. 9 reproduction: QoS experiment — SLA satisfaction, STP and
+fairness at QoS-H (0.8x), QoS-M (1.0x), QoS-L (1.2x) targets.
+
+Systems: MoCA-like, AuRORA-like, CaMDN integrated with AuRORA's
+bandwidth/NPU allocation (camdn_qos), per paper IV-A4.
+Paper claims: ~5.9x SLA, ~2.5x STP, ~3.0x fairness improvement.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.sim.driver import SimConfig, isolated_latencies
+from benchmarks.common import emit, mixed_tenants, run_sim, timed
+
+
+def run(verbose: bool = True) -> Dict:
+    tenants = mixed_tenants(16)
+    iso = isolated_latencies(tenants)
+    out: Dict = {}
+    gains = {"sla": [], "stp": [], "fair": []}
+    for name, lvl in (("QoS-H", 0.8), ("QoS-M", 1.0), ("QoS-L", 1.2)):
+        row = {}
+        for sched in ("moca", "aurora", "camdn_qos"):
+            cfg = SimConfig(qos_level=lvl)
+            res = run_sim(tenants, sched, cfg, dur=0.3)
+            row[sched] = {"sla": res.sla_rate, "stp": res.stp(iso),
+                          "fair": res.fairness(iso)}
+        out[name] = row
+        base = max(row["moca"]["sla"], row["aurora"]["sla"], 1e-3)
+        gains["sla"].append(row["camdn_qos"]["sla"] / base)
+        gains["stp"].append(row["camdn_qos"]["stp"] /
+                            max(row["moca"]["stp"], row["aurora"]["stp"], 1e-3))
+        gains["fair"].append(row["camdn_qos"]["fair"] /
+                             max(row["moca"]["fair"], row["aurora"]["fair"], 1e-3))
+        if verbose:
+            for sched, m in row.items():
+                print(f"  [{name}] {sched:10s} SLA {m['sla'] * 100:5.1f}% "
+                      f"STP {m['stp']:5.2f} fairness {m['fair']:.3f}")
+    out["gains"] = {k: sum(v) / len(v) for k, v in gains.items()}
+    return out
+
+
+def main() -> None:
+    us, r = timed(lambda: run())
+    g = r["gains"]
+    emit("fig9_qos", us,
+         f"SLA x{g['sla']:.2f} (paper 5.9)|STP x{g['stp']:.2f} (paper 2.5)|"
+         f"fairness x{g['fair']:.2f} (paper 3.0)")
+
+
+if __name__ == "__main__":
+    main()

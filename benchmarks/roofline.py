@@ -1,0 +1,76 @@
+"""Roofline table + perf-iteration helper.
+
+Reads the dry-run reports (experiments/dryrun/*.json) and prints the
+per-(arch x shape) roofline terms, dominant bottleneck, and
+MODEL_FLOPS / HLO_FLOPS useful-compute ratio.
+
+  PYTHONPATH=src python -m benchmarks.roofline            # table
+  PYTHONPATH=src python -m benchmarks.roofline --csv      # csv
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+REPORT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_reports(mesh: str = "16x16", opt: Optional[str] = None) -> List[Dict]:
+    out = []
+    for f in sorted(REPORT_DIR.glob("*.json")):
+        rep = json.loads(f.read_text())
+        if rep.get("mesh") != mesh:
+            continue
+        stem_opt = f.stem.split("__")[3] if f.stem.count("__") >= 3 else "base"
+        if (opt or "base") != stem_opt:
+            continue
+        out.append(rep)
+    return out
+
+
+def fmt_row(rep: Dict) -> str:
+    a, s = rep["arch"], rep["shape"]
+    if rep.get("status") == "skip":
+        return f"{a:24s} {s:12s} SKIP ({rep.get('reason', '')[:40]})"
+    if rep.get("status") == "fail":
+        return f"{a:24s} {s:12s} FAIL"
+    rf = rep.get("roofline")
+    if not rf:
+        return f"{a:24s} {s:12s} ok (no roofline)"
+    dom = rf["dominant"]
+    bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+    frac = rf["compute_s"] / bound if bound else 0.0
+    return (f"{a:24s} {s:12s} C={rf['compute_s'] * 1e3:9.2f}ms "
+            f"M={rf['memory_s'] * 1e3:9.2f}ms "
+            f"X={rf['collective_s'] * 1e3:9.2f}ms "
+            f"dom={dom:10s} roofline-frac={frac:5.2f} "
+            f"useful={rf.get('useful_ratio', 0):.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--opt", default=None)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    reps = load_reports(args.mesh, args.opt)
+    if args.csv:
+        print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+              "useful_ratio,status")
+        for r in reps:
+            rf = r.get("roofline") or {}
+            print(f"{r['arch']},{r['shape']},{rf.get('compute_s', '')},"
+                  f"{rf.get('memory_s', '')},{rf.get('collective_s', '')},"
+                  f"{rf.get('dominant', '')},{rf.get('useful_ratio', '')},"
+                  f"{r['status']}")
+        return
+    print(f"Roofline table (mesh {args.mesh}, opt {args.opt or 'base'}) — "
+          f"C=compute, M=memory(HBM), X=collective(ICI):")
+    for r in reps:
+        print("  " + fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (paper targets inline)
+plus the roofline summary when dry-run reports are present.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig2_contention, fig3_reuse, fig7_speedup,
+                            fig8_scaling, fig9_qos, table3_area)
+    print("name,us_per_call,derived")
+    for mod in (fig3_reuse, table3_area, fig2_contention, fig7_speedup,
+                fig8_scaling, fig9_qos):
+        mod.main()
+    # roofline summary (requires prior `python -m repro.launch.dryrun`)
+    try:
+        from benchmarks import roofline
+        reps = roofline.load_reports()
+        ok = [r for r in reps if r.get("roofline")]
+        if ok:
+            doms = {}
+            for r in ok:
+                d = r["roofline"]["dominant"]
+                doms[d] = doms.get(d, 0) + 1
+            print(f"roofline_cells,0,{len(ok)} cells analysed | "
+                  f"dominant terms: {doms}")
+    except Exception as e:  # roofline table is optional for bench runs
+        print(f"roofline_cells,0,unavailable ({e})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

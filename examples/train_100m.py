@@ -1,0 +1,82 @@
+"""Training driver example: a ~100M-parameter LM trained end-to-end with
+the production code path (synthetic pipeline, AdamW, checkpoint/restart
+supervisor, straggler policy).
+
+Default (CPU-friendly): a ~10M reduced model for 120 steps, showing loss
+descent and a mid-run checkpoint-resume.  ``--full`` trains the real
+~100M config for 300 steps (sized for a single accelerator host).
+
+  PYTHONPATH=src python examples/train_100m.py [--full]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.models.base import ArchConfig
+from repro.launch.train import build
+from repro.distributed.fault_tolerance import (StragglerPolicy,
+                                               SupervisorConfig,
+                                               TrainSupervisor)
+from repro.models.base import register
+from repro.optim import adamw
+
+
+def lm_100m() -> ArchConfig:
+    # ~103M params: 12L, d=768, 12H, ff=2048, vocab=32k (GPT2-small-class)
+    return register(ArchConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=12, d_ff=2048, vocab_size=32000,
+        dtype="float32"))
+
+
+def lm_10m() -> ArchConfig:
+    return register(ArchConfig(
+        name="lm-10m", family="dense", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=8, d_ff=1024, vocab_size=8000,
+        dtype="float32"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    cfg = lm_100m() if args.full else lm_10m()
+    steps = args.steps or (300 if args.full else 120)
+    print(f"training {cfg.name}: ~{cfg.param_count() / 1e6:.0f}M params, "
+          f"{steps} steps")
+
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=steps)
+    _, params, opt_state, step_fn, batch_at = build(
+        cfg.name, smoke=False, seq_len=128, global_batch=8, opt_cfg=opt_cfg)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="train100m_")
+    sup = TrainSupervisor(SupervisorConfig(ckpt_dir=ckpt_dir, ckpt_every=40),
+                          StragglerPolicy())
+    losses = []
+
+    def on_metrics(step, m):
+        losses.append(float(m["loss"]))
+        if step % 20 == 0:
+            print(f"  step {step:4d}  loss {losses[-1]:.4f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}")
+
+    half = steps // 2
+    params, opt_state, _ = sup.run(step_fn, (params, opt_state), batch_at,
+                                   num_steps=half, on_metrics=on_metrics)
+    # simulate a node failure + elastic restart from the checkpoint
+    print(f"  -- simulated preemption at step {half}; resuming from "
+          f"{ckpt_dir} --")
+    params2, opt2, resumed = sup.restore((params, opt_state))
+    params, opt_state, _ = sup.run(step_fn, (params2, opt2), batch_at,
+                                   num_steps=steps, start_step=resumed,
+                                   on_metrics=on_metrics)
+    print(f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'improved' if losses[-1] < losses[0] else 'NOT improved'})")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

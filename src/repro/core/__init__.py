@@ -1,0 +1,23 @@
+"""CaMDN core: NPU-controlled shared-cache architecture + cache-aware
+mapping + dynamic allocation (the paper's contribution, Sections III-B/C/D)."""
+from repro.core.allocator import DynamicCacheAllocator, Selection, TaskProfile
+from repro.core.cache import CacheConfig, SharedCache
+from repro.core.codegen import generate_gemm_program, run_candidate
+from repro.core.cpt import CachePageTable, CptFault
+from repro.core.lbm import LbmConfig, build_model_mapping, segment_blocks
+from repro.core.mapping import MapperConfig, build_mct, map_layer_lwm
+from repro.core.mct import (MCT, CacheMapEntry, LoopTable, MappingCandidate,
+                            ModelMapping, Residency)
+from repro.core.nec import Nec, NecError, Traffic
+from repro.core.runtime import ExecutionPlan, TenantModel, TenantTask
+from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph
+
+__all__ = [
+    "CacheConfig", "SharedCache", "generate_gemm_program", "run_candidate", "CachePageTable", "CptFault", "Nec",
+    "NecError", "Traffic", "MapperConfig", "build_mct", "map_layer_lwm",
+    "LbmConfig", "build_model_mapping", "segment_blocks", "MCT",
+    "MappingCandidate", "ModelMapping", "LoopTable", "CacheMapEntry",
+    "Residency", "DynamicCacheAllocator", "Selection", "TaskProfile",
+    "ExecutionPlan", "TenantModel", "TenantTask", "GemmDims", "LayerKind",
+    "LayerSpec", "ModelGraph",
+]

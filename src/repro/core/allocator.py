@@ -1,0 +1,105 @@
+"""Dynamic cache allocation — Algorithm 1 of the paper, line-faithful.
+
+Invoked at the beginning of every layer.  Predicts near-future available
+pages from per-task profiles (T_next, P_next, P_alloc — updated at the
+end of each layer), prefers enabling LBM for a block when its footprint
+fits the prediction, otherwise best-fit LWM selection; emits a timeout
+threshold ``T_ahead`` used by the runtime's page-request loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cache import SharedCache
+from repro.core.mct import MCT, MappingCandidate, ModelMapping
+
+INF = math.inf
+AHEAD_FRACTION = 0.2  # Algorithm 1 lines 11/16: T_ahead = T_cur + 0.2 * T_est
+
+
+@dataclasses.dataclass
+class TaskProfile:
+    """Per-task allocator state (the paper's global Data arrays)."""
+    t_next: float = 0.0    # predicted next reallocation time
+    p_next: int = 0        # predicted pages needed at next reallocation
+    p_alloc: int = 0       # pages currently allocated
+
+
+@dataclasses.dataclass
+class Selection:
+    candidate: MappingCandidate
+    p_cur: int
+    t_ahead: float
+
+
+class DynamicCacheAllocator:
+    """Algorithm 1 + the end-of-layer profile updates it relies on."""
+
+    def __init__(self, cache: SharedCache):
+        self.cache = cache
+        self.profiles: Dict[str, TaskProfile] = {}
+        self._lbm_enabled: Dict[str, bool] = {}   # task -> LBM active for current block
+
+    # -- task lifecycle --------------------------------------------------
+    def register_task(self, task: str) -> None:
+        self.profiles[task] = TaskProfile()
+        self._lbm_enabled[task] = False
+
+    def remove_task(self, task: str) -> None:
+        self.profiles.pop(task, None)
+        self._lbm_enabled.pop(task, None)
+
+    def has_enabled_lbm(self, task: str) -> bool:
+        return self._lbm_enabled.get(task, False)
+
+    def set_lbm(self, task: str, on: bool) -> None:
+        self._lbm_enabled[task] = on
+
+    # -- Algorithm 1, lines 1-6 -------------------------------------------
+    def pred_avail_pages(self, t_ahead: float, t_cur: str) -> int:
+        p_ahead = self.cache.free_pages  # idlePages()
+        for task, prof in self.profiles.items():
+            if task != t_cur and prof.t_next < t_ahead:
+                p_ahead += prof.p_alloc - prof.p_next
+        return p_ahead
+
+    # -- Algorithm 1, lines 7-22 -------------------------------------------
+    def select(self, task: str, mct: MCT, now: float,
+               layer_t_est: float, block_t_est: float,
+               is_head_of_block: bool) -> Selection:
+        # lines 7-9: LBM already enabled for this block
+        if self.has_enabled_lbm(task) and mct.lbm is not None:
+            m = mct.lbm
+            return Selection(m, m.p_need, INF)
+        # lines 10-15: head of block — try to enable LBM
+        if is_head_of_block and mct.lbm is not None:
+            t_ahead = now + block_t_est * AHEAD_FRACTION
+            p_ahead = self.pred_avail_pages(t_ahead, task)
+            if mct.lbm.p_need < p_ahead:
+                return Selection(mct.lbm, mct.lbm.p_need, t_ahead)
+        # lines 16-22: best-fit LWM
+        t_ahead = now + layer_t_est * AHEAD_FRACTION
+        p_ahead = self.pred_avail_pages(t_ahead, task)
+        m = mct.best_fit(p_ahead)
+        return Selection(m, m.p_need, t_ahead)
+
+    # -- end-of-layer bookkeeping (paper III-D: 'updated at the end of
+    # each layer') ----------------------------------------------------------
+    def update_profile(self, task: str, now: float,
+                       next_realloc_in: float, next_p_need: int,
+                       p_alloc: int) -> None:
+        prof = self.profiles[task]
+        prof.t_next = now + next_realloc_in
+        prof.p_next = next_p_need
+        prof.p_alloc = p_alloc
+
+    def on_timeout_downgrade(self, mct: MCT, current: MappingCandidate
+                             ) -> MappingCandidate:
+        """Every time a page-request timeout fires, fall back to the
+        candidate requiring fewer pages (paper III-D)."""
+        if current.kind == "LBM":
+            # abandon LBM for this block; largest LWM below current need
+            return mct.best_fit(max(0, current.p_need - 1))
+        return mct.next_smaller(current)

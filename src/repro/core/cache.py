@@ -1,0 +1,163 @@
+"""Shared-cache model with way partitioning and an NPU page pool.
+
+Implements the architecture of paper Section III-B(1,3):
+
+- The LLC is physically organized as ``num_slices`` slices x ``num_ways``
+  ways x ``num_sets`` sets of ``line_bytes`` lines.
+- A way-mask register per slice splits it into a general-purpose (CPU)
+  subspace and an NPU subspace (ways >= ``cpu_ways`` belong to the NPU).
+- The NPU subspace is divided into fixed-size *pages* (32 KB for a 16 MB
+  cache in the paper) which are the allocation currency handed to
+  tenants.  A page is a contiguous range of physical cache space in
+  ``pcaddr`` terms; the pcaddr bit layout (byte offset | slice | set |
+  way, low to high) stripes consecutive lines across slices so that a
+  page draws bandwidth from every slice (Fig. 5b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set
+
+from repro.core.types import ceil_div
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    total_bytes: int = 16 * 2**20
+    num_slices: int = 8
+    num_ways: int = 16
+    npu_ways: int = 12            # ways assigned to the NPU subspace
+    line_bytes: int = 64
+    page_bytes: int = 32 * 2**10  # CaMDN page size
+
+    def __post_init__(self):
+        if self.npu_ways > self.num_ways:
+            raise ValueError("npu_ways cannot exceed num_ways")
+        if self.total_bytes % (self.num_slices * self.num_ways * self.line_bytes):
+            raise ValueError("total_bytes must evenly split into slices*ways*lines")
+
+    @property
+    def slice_bytes(self) -> int:
+        return self.total_bytes // self.num_slices
+
+    @property
+    def way_bytes(self) -> int:
+        """Bytes of one way across all slices."""
+        return self.total_bytes // self.num_ways
+
+    @property
+    def num_sets(self) -> int:
+        return self.slice_bytes // (self.num_ways * self.line_bytes)
+
+    @property
+    def npu_bytes(self) -> int:
+        return self.way_bytes * self.npu_ways
+
+    @property
+    def cpu_bytes(self) -> int:
+        return self.way_bytes * (self.num_ways - self.npu_ways)
+
+    @property
+    def num_pages(self) -> int:
+        return self.npu_bytes // self.page_bytes
+
+    @property
+    def lines_per_page(self) -> int:
+        return self.page_bytes // self.line_bytes
+
+
+@dataclasses.dataclass
+class PcAddr:
+    """Decomposed physical cache address (Fig. 5b bit fields)."""
+    byte_offset: int
+    slice_index: int
+    set_index: int
+    way_index: int
+
+
+class SharedCache:
+    """Page-granular state of the NPU subspace of the shared cache.
+
+    Tracks page ownership per tenant and exposes the way mask; line-level
+    data movement/traffic accounting lives in :mod:`repro.core.nec`.
+    """
+
+    def __init__(self, config: CacheConfig):
+        self.config = config
+        self._free: List[int] = list(range(config.num_pages))
+        self._owner: Dict[int, str] = {}          # pcpn -> tenant id
+        self._pages_of: Dict[str, Set[int]] = {}  # tenant id -> pcpns
+        # way-mask per slice: bit i set => way i belongs to the NPU subspace
+        cpu_ways = config.num_ways - config.npu_ways
+        self.way_mask: List[int] = [
+            ((1 << config.num_ways) - 1) & ~((1 << cpu_ways) - 1)
+            for _ in range(config.num_slices)
+        ]
+
+    # ---- page pool -------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_of(self, tenant: str) -> Set[int]:
+        return set(self._pages_of.get(tenant, set()))
+
+    def allocated_pages(self, tenant: str) -> int:
+        return len(self._pages_of.get(tenant, ()))
+
+    def alloc(self, tenant: str, n_pages: int) -> Optional[List[int]]:
+        """Allocate ``n_pages`` to ``tenant``; returns pcpns or None if
+        the pool cannot satisfy the request (caller decides to wait)."""
+        if n_pages < 0:
+            raise ValueError("negative page count")
+        if n_pages > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n_pages)]
+        for p in got:
+            self._owner[p] = tenant
+        self._pages_of.setdefault(tenant, set()).update(got)
+        return got
+
+    def free(self, tenant: str, pages: Optional[List[int]] = None) -> int:
+        """Release ``pages`` (or all pages) owned by ``tenant``."""
+        owned = self._pages_of.get(tenant, set())
+        to_free = set(owned) if pages is None else set(pages)
+        bad = to_free - owned
+        if bad:
+            raise KeyError(f"tenant {tenant} does not own pages {sorted(bad)}")
+        for p in to_free:
+            owned.discard(p)
+            del self._owner[p]
+            self._free.append(p)
+        if not owned:
+            self._pages_of.pop(tenant, None)
+        return len(to_free)
+
+    def owner_of(self, pcpn: int) -> Optional[str]:
+        return self._owner.get(pcpn)
+
+    # ---- pcaddr decomposition (Fig. 5b) -----------------------------
+    def decompose(self, pcaddr: int) -> PcAddr:
+        c = self.config
+        off_bits = c.line_bytes.bit_length() - 1
+        slice_bits = (c.num_slices - 1).bit_length()
+        set_bits = (c.num_sets - 1).bit_length()
+        byte_offset = pcaddr & (c.line_bytes - 1)
+        slice_index = (pcaddr >> off_bits) & (c.num_slices - 1)
+        set_index = (pcaddr >> (off_bits + slice_bits)) & (c.num_sets - 1)
+        way_index = pcaddr >> (off_bits + slice_bits + set_bits)
+        return PcAddr(byte_offset, slice_index, set_index, way_index)
+
+    def page_base_pcaddr(self, pcpn: int) -> int:
+        return pcpn * self.config.page_bytes
+
+    def check_way_partition(self, pcaddr: int) -> bool:
+        """True iff this NPU-subspace pcaddr maps into an NPU-owned way."""
+        a = self.decompose(pcaddr)
+        cpu_ways = self.config.num_ways - self.config.npu_ways
+        # NPU pages are laid out from way ``cpu_ways`` upward
+        return a.way_index + cpu_ways < self.config.num_ways
+
+    # ---- introspection ----------------------------------------------
+    def snapshot(self) -> Dict[str, int]:
+        return {t: len(ps) for t, ps in self._pages_of.items()}

@@ -1,0 +1,138 @@
+"""NPU program generation: unroll a mapping candidate's compact loop
+table into an executable NEC command stream (paper III-C3: MCTs store
+candidates "in a compact format instead of unrolled NPU instructions" —
+this module is the unroller that runs at dispatch time).
+
+The generated program is a sequence of NEC operations (fill / read /
+write / writeback / bypass_read / bypass_write) at cache-line
+granularity, executed against :class:`repro.core.nec.Nec`.  Because the
+NEC does line-accurate traffic accounting, executing the program
+*validates the mapper's analytic DRAM model*: tests assert the executed
+byte counts match ``candidate.dram_bytes`` (tests/test_codegen.py).
+
+Virtual-cache layout per the candidate's cache map: resident panels at
+their assigned vcpn windows; streamed operands bypass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+from repro.core.cache import SharedCache
+from repro.core.cpt import CachePageTable
+from repro.core.mct import LoopTable, MappingCandidate, Residency
+from repro.core.nec import Nec
+from repro.core.types import GemmDims, LayerSpec, ceil_div
+
+
+@dataclasses.dataclass(frozen=True)
+class NecOp:
+    op: str          # fill | read | write | writeback | bypass_read | bypass_write
+    nbytes: int
+    vcaddr: int = 0  # for cached ops (line-aligned window start)
+
+
+def _tiles(total: int, tile: int) -> List[Tuple[int, int]]:
+    """[(offset, size)] covering [0, total) in tile-sized steps."""
+    out = []
+    o = 0
+    while o < total:
+        out.append((o, min(tile, total - o)))
+        o += tile
+    return out
+
+
+def generate_gemm_program(g: GemmDims, loop: LoopTable, eb: int,
+                          panel_vcaddr: int = 0) -> Iterator[NecOp]:
+    """Unrolled command stream for one GEMM under one loop table.
+
+    Traffic contract (mirrors the mapper's model, core/mapping.py):
+      STREAM  : A tiles bypass per (m,n), B tiles bypass per (m,n), C out
+      A_PANEL : A row-panel filled per m-tile (cache-resident), B bypass
+      B_PANEL : B filled once (resident across reps), A bypass
+      BOTH    : B resident + A panel resident
+    """
+    r = g.reps
+    res = loop.residency
+    a_panel_base = panel_vcaddr + (g.b_bytes_one * eb
+                                   if res == Residency.BOTH else 0)
+    for rep in range(r):
+        if res in (Residency.B_PANEL, Residency.BOTH):
+            if rep == 0 or not g.b_reused:
+                # B enters the cache once (per rep if not reused)
+                yield NecOp("fill", g.b_bytes_one * eb, panel_vcaddr)
+        for (mo, ms) in _tiles(g.M, loop.tm):
+            a_panel_bytes = ms * g.K * eb
+            if res in (Residency.A_PANEL, Residency.BOTH):
+                # A row-panel becomes cache-resident for this m-tile
+                yield NecOp("fill", a_panel_bytes, a_panel_base)
+            elif res == Residency.B_PANEL:
+                # with B resident, A streams exactly once (scratchpad
+                # holds the [tm, K] slab across the n loop)
+                yield NecOp("bypass_read", a_panel_bytes)
+            for (no, ns) in _tiles(g.N, loop.tn):
+                if res in (Residency.A_PANEL, Residency.BOTH):
+                    yield NecOp("read", a_panel_bytes, a_panel_base)  # hits
+                elif res == Residency.STREAM:
+                    # A tile reloaded from DRAM for every n-tile
+                    yield NecOp("bypass_read", a_panel_bytes)
+                # B operand
+                if res in (Residency.B_PANEL, Residency.BOTH):
+                    yield NecOp("read", g.K * ns * eb, panel_vcaddr)  # hits
+                else:
+                    yield NecOp("bypass_read", g.K * ns * eb)
+                # C tile out (bypass-write: LWM outputs go to DRAM)
+                yield NecOp("bypass_write", ms * ns * eb)
+
+
+def execute(ops: Iterator[NecOp], nec: Nec, cpt: CachePageTable,
+            tenant: str) -> None:
+    """Run a command stream against the NEC (line-accurate accounting)."""
+    for o in ops:
+        if o.op == "fill":
+            nec.fill(tenant, cpt, o.vcaddr, o.nbytes)
+        elif o.op == "read":
+            nec.read(tenant, cpt, o.vcaddr, o.nbytes)
+        elif o.op == "write":
+            nec.write(tenant, cpt, o.vcaddr, o.nbytes)
+        elif o.op == "writeback":
+            nec.writeback(tenant, cpt, o.vcaddr, o.nbytes)
+        elif o.op == "bypass_read":
+            nec.bypass_read(tenant, o.nbytes)
+        elif o.op == "bypass_write":
+            nec.bypass_write(tenant, o.nbytes)
+        else:
+            raise ValueError(o.op)
+
+
+def run_candidate(layer: LayerSpec, cand: MappingCandidate,
+                  cache: SharedCache, nec: Nec, tenant: str) -> int:
+    """Allocate the candidate's pages, install the CPT, execute the
+    unrolled program for every GEMM, release.  Returns DRAM bytes moved
+    (from the NEC's line-accurate counters)."""
+    before = nec.per_tenant.get(tenant)
+    before_total = before.dram_total if before else 0
+    pages = cache.alloc(tenant, cand.p_need)
+    if pages is None:
+        raise RuntimeError("insufficient pages for candidate")
+    cpt = CachePageTable(cache.config)
+    cpt.map_pages(pages)
+    try:
+        vbase = 0
+        for g, loop in zip(layer.gemms, cand.loops):
+            for op in generate_gemm_program(g, loop, layer.elem_bytes,
+                                            panel_vcaddr=vbase):
+                execute(iter([op]), nec, cpt, tenant)
+            # next GEMM's panels start after this one's resident bytes
+            resident = 0
+            if loop.residency in (Residency.B_PANEL, Residency.BOTH):
+                resident += g.b_bytes_one * layer.elem_bytes
+            if loop.residency in (Residency.A_PANEL, Residency.BOTH):
+                resident += loop.tm * g.K * layer.elem_bytes
+            vbase += ceil_div(resident, cache.config.page_bytes) * \
+                cache.config.page_bytes
+    finally:
+        cache.free(tenant, pages)
+        nec.invalidate_tenant(tenant)
+    after = nec.per_tenant[tenant].dram_total
+    return after - before_total

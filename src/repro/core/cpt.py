@@ -1,0 +1,83 @@
+"""Cache page table (CPT): per-NPU vcaddr -> pcaddr translation.
+
+Paper Section III-B(3): every NPU holds a hardware CPT of at most
+``cache_bytes / page_bytes`` entries (512 for 16 MB / 32 KB), each entry
+storing a physical cache page number (pcpn) plus a valid bit in <= 3
+bytes.  Tenants address their model-exclusive cache region through an
+independent *virtual cache address space*; the scheduler installs /
+revokes mappings when pages are granted / reclaimed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.cache import CacheConfig
+
+
+class CptFault(Exception):
+    """Access through an invalid CPT entry (unmapped vcpn)."""
+
+
+@dataclasses.dataclass
+class CptEntry:
+    pcpn: int
+    valid: bool = True
+
+
+class CachePageTable:
+    """One CPT instance (one per NPU in hardware; one per tenant here —
+    the paper assigns a group of NPUs running the same model identical
+    CPT contents, which multicast exploits)."""
+
+    def __init__(self, config: CacheConfig):
+        self.config = config
+        self.max_entries = config.num_pages
+        self._entries: Dict[int, CptEntry] = {}
+
+    # ---- scheduler-side management ----------------------------------
+    def map(self, vcpn: int, pcpn: int) -> None:
+        if not (0 <= vcpn < self.max_entries):
+            raise ValueError(f"vcpn {vcpn} out of range (max {self.max_entries})")
+        if not (0 <= pcpn < self.config.num_pages):
+            raise ValueError(f"pcpn {pcpn} out of range")
+        self._entries[vcpn] = CptEntry(pcpn=pcpn, valid=True)
+
+    def unmap(self, vcpn: int) -> None:
+        self._entries.pop(vcpn, None)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def map_pages(self, pcpns: List[int], base_vcpn: int = 0) -> None:
+        """Install a contiguous virtual window over ``pcpns``."""
+        for i, p in enumerate(pcpns):
+            self.map(base_vcpn + i, p)
+
+    @property
+    def mapped_vcpns(self) -> List[int]:
+        return sorted(v for v, e in self._entries.items() if e.valid)
+
+    @property
+    def num_valid(self) -> int:
+        return sum(1 for e in self._entries.values() if e.valid)
+
+    # ---- NPU-side translation (hardware path) ------------------------
+    def translate(self, vcaddr: int) -> int:
+        page = self.config.page_bytes
+        vcpn, offset = divmod(vcaddr, page)
+        e = self._entries.get(vcpn)
+        if e is None or not e.valid:
+            raise CptFault(f"vcpn {vcpn} not mapped")
+        return e.pcpn * page + offset
+
+    def translate_line(self, vcaddr: int) -> int:
+        """Translate and return the pcaddr of the *line* containing vcaddr."""
+        pc = self.translate(vcaddr)
+        return pc & ~(self.config.line_bytes - 1)
+
+    # ---- hardware cost model (Table III) ------------------------------
+    @property
+    def sram_bytes(self) -> int:
+        """<=3 bytes per entry (pcpn + valid bit), per the paper."""
+        return self.max_entries * 3

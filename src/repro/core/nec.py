@@ -1,0 +1,222 @@
+"""NEC: the NPU-exclusive controller access semantics (paper III-B(2)).
+
+The NEC replaces hardware-managed replacement inside the NPU subspace
+with explicit, line-granular semantics issued by NPU programs:
+
+  basic     fill        (memory  -> cache line)
+            writeback   (cache   -> memory line)
+            read        (cache   -> NPU)
+            write       (NPU     -> cache)
+  advanced  bypass_read          (memory -> NPU, no cache residency)
+            bypass_write         (NPU -> memory, no cache residency)
+            multicast_read       (cache -> group of NPUs, one cache access)
+            multicast_bypass_read(memory -> group of NPUs, one DRAM access)
+
+This module is the single point of *traffic accounting* for the whole
+repo: the simulator charges DRAM / NoC / cache-port bytes exclusively
+through a :class:`Nec` instance, so the CaMDN vs baseline comparisons in
+benchmarks/ all flow through the same bookkeeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set, Tuple
+
+from repro.core.cache import CacheConfig, SharedCache
+from repro.core.cpt import CachePageTable, CptFault
+
+
+@dataclasses.dataclass
+class Traffic:
+    """Byte counters; all monotonically increasing."""
+    dram_read: int = 0
+    dram_write: int = 0
+    cache_read: int = 0     # cache data-array read bytes
+    cache_write: int = 0
+    noc: int = 0            # cache/memory <-> NPU interconnect bytes
+    hits: int = 0           # line-granular NPU requests served from cache
+    accesses: int = 0       # line-granular NPU data requests
+
+    @property
+    def dram_total(self) -> int:
+        return self.dram_read + self.dram_write
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.accesses if self.accesses else 0.0
+
+    def merged(self, other: "Traffic") -> "Traffic":
+        return Traffic(*[a + b for a, b in
+                         zip(dataclasses.astuple(self), dataclasses.astuple(other))])
+
+
+class NecError(Exception):
+    pass
+
+
+class Nec:
+    """Line-granular NPU-controlled access over a tenant's CPT window.
+
+    Residency is tracked per (tenant, line-aligned vcaddr): under
+    NPU-controlled semantics a line holds valid data iff the program
+    filled or wrote it, and the CPT mapping pins it — there is no
+    transparent eviction, so *within the NPU subspace tenants can never
+    evict each other* (the property the paper's architecture buys).
+    """
+
+    def __init__(self, cache: SharedCache):
+        self.cache = cache
+        self.config = cache.config
+        self.traffic = Traffic()
+        self.per_tenant: Dict[str, Traffic] = {}
+        # resident line set: (tenant, line_vcaddr)
+        self._resident: Dict[str, Set[int]] = {}
+
+    # -- helpers -------------------------------------------------------
+    def _t(self, tenant: str) -> Traffic:
+        if tenant not in self.per_tenant:
+            self.per_tenant[tenant] = Traffic()
+        return self.per_tenant[tenant]
+
+    def _line(self, vcaddr: int) -> int:
+        return vcaddr & ~(self.config.line_bytes - 1)
+
+    def _check_mapped(self, cpt: CachePageTable, vcaddr: int) -> int:
+        pcaddr = cpt.translate_line(vcaddr)  # raises CptFault if unmapped
+        if not self.cache.check_way_partition(pcaddr):
+            raise NecError(f"pcaddr {pcaddr:#x} escapes the NPU way partition")
+        return pcaddr
+
+    def resident_lines(self, tenant: str) -> int:
+        return len(self._resident.get(tenant, ()))
+
+    def invalidate_tenant(self, tenant: str) -> None:
+        """Drop all residency for a tenant (pages reclaimed)."""
+        self._resident.pop(tenant, None)
+
+    def invalidate_range(self, tenant: str, vcaddr: int, nbytes: int) -> None:
+        lines = self._resident.get(tenant)
+        if not lines:
+            return
+        lo = self._line(vcaddr)
+        hi = vcaddr + nbytes
+        for l in [l for l in lines if lo <= l < hi]:
+            lines.discard(l)
+
+    # -- basic semantics -------------------------------------------------
+    def fill(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int) -> None:
+        """memory -> cache (explicit prefetch/placement)."""
+        lb = self.config.line_bytes
+        res = self._resident.setdefault(tenant, set())
+        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
+            self._check_mapped(cpt, line)
+            if line not in res:
+                res.add(line)
+                for t in (self.traffic, self._t(tenant)):
+                    t.dram_read += lb
+                    t.cache_write += lb
+
+    def writeback(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int) -> None:
+        """cache -> memory."""
+        lb = self.config.line_bytes
+        res = self._resident.setdefault(tenant, set())
+        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
+            self._check_mapped(cpt, line)
+            if line in res:
+                for t in (self.traffic, self._t(tenant)):
+                    t.cache_read += lb
+                    t.dram_write += lb
+
+    def read(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int,
+             fill_on_miss: bool = True) -> int:
+        """cache -> NPU.  Returns bytes that missed (and were filled)."""
+        lb = self.config.line_bytes
+        res = self._resident.setdefault(tenant, set())
+        missed = 0
+        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
+            self._check_mapped(cpt, line)
+            for t in (self.traffic, self._t(tenant)):
+                t.accesses += 1
+            if line in res:
+                for t in (self.traffic, self._t(tenant)):
+                    t.hits += 1
+                    t.cache_read += lb
+                    t.noc += lb
+            else:
+                missed += lb
+                if fill_on_miss:
+                    res.add(line)
+                    for t in (self.traffic, self._t(tenant)):
+                        t.dram_read += lb
+                        t.cache_write += lb
+                        t.cache_read += lb
+                        t.noc += lb
+                else:
+                    for t in (self.traffic, self._t(tenant)):
+                        t.dram_read += lb
+                        t.noc += lb
+        return missed
+
+    def write(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int) -> None:
+        """NPU -> cache (no DRAM traffic until writeback)."""
+        lb = self.config.line_bytes
+        res = self._resident.setdefault(tenant, set())
+        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
+            self._check_mapped(cpt, line)
+            res.add(line)
+            for t in (self.traffic, self._t(tenant)):
+                t.accesses += 1
+                t.hits += 1  # NPU-controlled writes never miss
+                t.noc += lb
+                t.cache_write += lb
+
+    # -- advanced semantics ------------------------------------------------
+    def bypass_read(self, tenant: str, nbytes: int) -> None:
+        """memory -> NPU directly; zero cache footprint (non-reusable data)."""
+        for t in (self.traffic, self._t(tenant)):
+            t.accesses += (nbytes + self.config.line_bytes - 1) // self.config.line_bytes
+            t.dram_read += nbytes
+            t.noc += nbytes
+
+    def bypass_write(self, tenant: str, nbytes: int) -> None:
+        """NPU -> memory directly."""
+        for t in (self.traffic, self._t(tenant)):
+            t.dram_write += nbytes
+            t.noc += nbytes
+
+    def multicast_read(self, tenant: str, cpt: CachePageTable, vcaddr: int,
+                       nbytes: int, group_size: int) -> int:
+        """cache -> a group of NPUs running the same model: ONE cache
+        data-array access, ``group_size`` NoC deliveries."""
+        if group_size < 1:
+            raise NecError("multicast group must be >= 1")
+        lb = self.config.line_bytes
+        res = self._resident.setdefault(tenant, set())
+        missed = 0
+        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
+            self._check_mapped(cpt, line)
+            for t in (self.traffic, self._t(tenant)):
+                t.accesses += 1
+            if line in res:
+                for t in (self.traffic, self._t(tenant)):
+                    t.hits += 1
+                    t.cache_read += lb
+                    t.noc += lb * group_size
+            else:
+                missed += lb
+                res.add(line)
+                for t in (self.traffic, self._t(tenant)):
+                    t.dram_read += lb
+                    t.cache_write += lb
+                    t.cache_read += lb
+                    t.noc += lb * group_size
+        return missed
+
+    def multicast_bypass_read(self, tenant: str, nbytes: int, group_size: int) -> None:
+        """memory -> a group of NPUs: ONE DRAM access total (vs
+        ``group_size`` under private fetching)."""
+        if group_size < 1:
+            raise NecError("multicast group must be >= 1")
+        for t in (self.traffic, self._t(tenant)):
+            t.dram_read += nbytes
+            t.noc += nbytes * group_size

@@ -1,0 +1,110 @@
+"""Bridge: CaMDN cache pages -> TPU VMEM tile configurations.
+
+On the paper's SoC a mapping candidate's page budget bounds the shared-
+cache working set.  On TPU the analogous budget is the *VMEM working
+set* a Pallas kernel claims through its BlockSpecs.  This module turns a
+page budget into concrete, hardware-aligned tile shapes for the kernels
+in ``repro.kernels`` — the LWM candidates of the JAX serving path — and
+decides when the LBM (fused-block) kernel variant is admissible.
+
+TPU alignment rules honored here (v5e):
+  * minor (lane) dimension tiles are multiples of 128,
+  * second-minor (sublane) tiles are multiples of 8 (fp32) / 16 (bf16),
+  * MXU-efficient matmul tiles are multiples of 128 on M/N/K.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.mct import MappingCandidate
+from repro.core.types import ceil_div
+
+LANE = 128
+PAGE_BYTES = 32 * 2**10
+# v5e has ~128 MiB of VMEM per core usable by Pallas; XLA reserves a slice.
+VMEM_BYTES = 96 * 2**20
+VMEM_PAGES = VMEM_BYTES // PAGE_BYTES
+
+
+def sublane(dtype_bytes: int) -> int:
+    return {4: 8, 2: 16, 1: 32}.get(dtype_bytes, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """A matmul tile choice for kernels/cache_matmul.py."""
+    bm: int
+    bn: int
+    bk: int
+    vmem_bytes: int
+    fused_block: bool = False   # LBM variant: intermediates stay in VMEM
+
+    @property
+    def pages(self) -> int:
+        return ceil_div(self.vmem_bytes, PAGE_BYTES)
+
+
+def tile_vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int,
+                    acc_bytes: int = 4) -> int:
+    """Working set of one (bm,bn,bk) matmul tile: A+B double-buffered in
+    dtype, C accumulator in fp32."""
+    return 2 * (bm * bk + bk * bn) * dtype_bytes + bm * bn * acc_bytes
+
+
+def candidates_for_matmul(m: int, n: int, k: int, dtype_bytes: int,
+                          budgets_pages: Tuple[int, ...] = (4, 16, 64, 256),
+                          ) -> List[TileConfig]:
+    """Enumerate hardware-aligned tile configs, one per page budget —
+    the TPU analogue of the per-usage-limit LWM candidates."""
+    sl = sublane(dtype_bytes)
+    out: List[TileConfig] = []
+    seen = set()
+    for budget in budgets_pages:
+        cap = budget * PAGE_BYTES
+        best: Optional[TileConfig] = None
+        bk_opts = [x for x in (128, 256, 512, 1024, 2048) if x <= max(k, 128)]
+        bmn_opts = [x for x in (128, 256, 512, 1024) ]
+        for bk in bk_opts:
+            for bm in bmn_opts:
+                if bm > max(m, 128):
+                    continue
+                for bn in bmn_opts:
+                    if bn > max(n, 128):
+                        continue
+                    vb = tile_vmem_bytes(bm, bn, bk, dtype_bytes)
+                    if vb > cap:
+                        continue
+                    # prefer larger K tiles (fewer accumulator spills),
+                    # then larger M*N (better reuse)
+                    score = (bk, bm * bn, min(bm, bn))
+                    if best is None or score > (best.bk, best.bm * best.bn,
+                                                min(best.bm, best.bn)):
+                        best = TileConfig(bm, bn, bk, vb)
+        if best and (best.bm, best.bn, best.bk) not in seen:
+            seen.add((best.bm, best.bn, best.bk))
+            out.append(best)
+    if not out:  # smallest legal tile as last resort
+        out.append(TileConfig(LANE, LANE, LANE,
+                              tile_vmem_bytes(LANE, LANE, LANE, dtype_bytes)))
+    return out
+
+
+def fused_ffn_admissible(seq_block: int, d_model: int, d_ff: int,
+                         dtype_bytes: int, pages_avail: int) -> bool:
+    """LBM admissibility on TPU: can a fused FFN block keep its
+    intermediate (seq_block x d_ff) activation entirely in VMEM within
+    the granted page budget?"""
+    inter = seq_block * d_ff * dtype_bytes       # hidden activation
+    io = 2 * seq_block * d_model * dtype_bytes   # in + out tiles
+    w_tiles = 2 * 2 * LANE * max(d_model, d_ff) * dtype_bytes  # streamed
+    return inter + io + w_tiles <= pages_avail * PAGE_BYTES
+
+
+def select_tile(cands: List[TileConfig], pages_avail: int) -> TileConfig:
+    """Best-fit selection (mirrors MCT.best_fit): the largest-footprint
+    candidate whose VMEM claim fits the granted pages."""
+    fitting = [c for c in cands if c.pages <= pages_avail]
+    if not fitting:
+        return min(cands, key=lambda c: c.pages)
+    return max(fitting, key=lambda c: (c.bk, c.bm * c.bn))

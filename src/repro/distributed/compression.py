@@ -1,0 +1,65 @@
+"""Gradient compression for the cross-pod (DCN) axis: int8 quantization
+with error feedback.
+
+At 1000+-node scale the inter-pod all-reduce rides DCN (≈25 GB/s/host
+vs 4x50 GB/s ICI), so pods reduce locally at full precision and exchange
+int8-compressed gradients across the 'pod' axis.  Error feedback keeps
+the quantization bias out of the optimizer trajectory (residual carried
+to the next step), preserving convergence.
+
+Implemented as pure pytree transforms so launch/train.py composes them
+around the optimizer; correctness (unbiased-ish reconstruction, residual
+bookkeeping, convergence on a quadratic) in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Returns (compressed-and-reconstructed grads, new error residual).
+
+    The reconstruction is what crosses the pod axis; the residual
+    (grad - reconstruction) is added to next step's gradient before
+    compression (error feedback / EF-SGD)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        rec = dequantize_int8(q, s)
+        return rec, g32 - rec
+
+    pairs = jax.tree_util.tree_map(one, grads, error)
+    rec = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return rec, new_err
+
+
+def compressed_bytes(params: Any) -> Tuple[int, int]:
+    """(raw fp32 bytes, int8+scale bytes) crossing the pod axis/step."""
+    leaves = jax.tree_util.tree_leaves(params)
+    raw = sum(l.size * 4 for l in leaves)
+    comp = sum(l.size * 1 + 4 for l in leaves)
+    return raw, comp

@@ -1,0 +1,135 @@
+"""Fault tolerance for 1000+-node runs: checkpoint/restart with elastic
+re-shard, straggler detection, and a supervised train-loop wrapper.
+
+Design (scales past this single-host repo; everything here is exercised
+on the CPU mesh in tests/test_fault_tolerance.py):
+
+* Restart: the data pipeline is a pure function of (seed, step), and
+  checkpoints store the step — a restarted job replays nothing and
+  misses nothing.  Checkpoints are host-gathered and re-shardable, so
+  the job may come back on a different mesh (elastic scaling: lose a
+  pod, resume on one; gain one, resume on three).
+* Straggler mitigation: per-step wall times feed an EWMA; a step slower
+  than ``threshold x`` the EWMA increments a strike counter per suspect
+  host.  Real deployments map strikes to hot-spare swap (TPU) or
+  checkpoint-evict-resume; here the policy object reports and the
+  supervisor triggers a (simulated) restart after ``max_strikes``.
+* Crash containment: the supervisor catches step-level exceptions,
+  restores the last checkpoint, and continues — a single flaky step
+  (e.g. preempted worker) costs one checkpoint interval, not the run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    ewma_alpha: float = 0.2
+    threshold: float = 2.5      # x EWMA -> suspect
+    max_strikes: int = 3
+
+    def __post_init__(self):
+        self.ewma: Optional[float] = None
+        self.strikes = 0
+        self.events: list = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True when mitigation should trigger."""
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.threshold * self.ewma
+        if slow:
+            self.strikes += 1
+            self.events.append((step, dt, self.ewma))
+        else:
+            self.strikes = 0
+        # slow steps should not poison the baseline
+        self.ewma = (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * \
+            min(dt, self.ewma * self.threshold if self.ewma else dt)
+        return self.strikes >= self.max_strikes
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    async_save: bool = True
+
+
+class TrainSupervisor:
+    """Wraps a train loop with checkpoint/restart + straggler handling."""
+
+    def __init__(self, cfg: SupervisorConfig,
+                 straggler: Optional[StragglerPolicy] = None):
+        self.cfg = cfg
+        self.straggler = straggler or StragglerPolicy()
+        self.restarts = 0
+        self._pending_save = None
+
+    def run(self,
+            step_fn: Callable[[Any, Any, Dict], Tuple[Any, Any, Dict]],
+            state: Tuple[Any, Any],
+            batch_at: Callable[[int], Dict],
+            num_steps: int,
+            start_step: int = 0,
+            shardings: Any = None,
+            on_metrics: Optional[Callable[[int, Dict], None]] = None,
+            ) -> Tuple[Any, Any, int]:
+        params, opt_state = state
+        step = start_step
+        while step < num_steps:
+            t0 = time.time()
+            try:
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch_at(step))
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                params, opt_state, step = self.restore(
+                    (params, opt_state), shardings)
+                continue
+            dt = time.time() - t0
+            if self.straggler.observe(step, dt):
+                # mitigation: in production, swap the slow host; here we
+                # checkpoint immediately so a kill/restart loses nothing
+                self.save(step, params, opt_state)
+                self.straggler.strikes = 0
+            step += 1
+            if on_metrics:
+                on_metrics(step, metrics)
+            if step % self.cfg.ckpt_every == 0:
+                self.save(step, params, opt_state)
+        self.save(step, params, opt_state)
+        self.join()
+        return params, opt_state, step
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, params, opt_state) -> None:
+        tree = {"params": params, "opt": opt_state}
+        if self.cfg.async_save:
+            self.join()
+            self._pending_save = ckpt.save_async(
+                self.cfg.ckpt_dir, step, tree, extra={"step": step})
+        else:
+            ckpt.save(self.cfg.ckpt_dir, step, tree, extra={"step": step})
+
+    def join(self) -> None:
+        if self._pending_save is not None:
+            self._pending_save.join()
+            self._pending_save = None
+
+    def restore(self, tree_like, shardings=None) -> Tuple[Any, Any, int]:
+        self.join()
+        tree, extra = ckpt.restore(
+            self.cfg.ckpt_dir,
+            {"params": tree_like[0], "opt": tree_like[1]},
+            shardings=shardings)
+        return tree["params"], tree["opt"], int(extra["step"])

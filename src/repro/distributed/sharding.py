@@ -1,0 +1,229 @@
+"""Sharding rules: per-arch parameter/activation PartitionSpecs and the
+mesh-context helper the model code uses for activation hints.
+
+Axis roles (launch/mesh.py):
+  pod   — data parallelism across pods (DCN); serving: replica groups
+  data  — data parallelism / ZeRO / FSDP / MoE group axis (EP dispatch)
+  model — tensor parallelism (heads, ffn inner, vocab) and expert axis
+
+The model code is mesh-agnostic: :func:`shard_hint` becomes a no-op
+unless a mesh has been activated via :func:`use_mesh` (the launch layer
+does this), so CPU smoke tests see zero sharding machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Activate a mesh for shard_hint() inside model code."""
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def _mesh_axes() -> Tuple[str, ...]:
+    return tuple(_ACTIVE_MESH.axis_names) if _ACTIVE_MESH is not None else ()
+
+
+def _filter_spec(spec: Tuple[Optional[str], ...]) -> P:
+    """Drop axes the active mesh does not have (e.g. 'pod' on 2-D mesh)."""
+    axes = _mesh_axes()
+    clean = []
+    for s in spec:
+        if s is None:
+            clean.append(None)
+        elif isinstance(s, tuple):
+            kept = tuple(a for a in s if a in axes)
+            clean.append(kept if kept else None)
+        else:
+            clean.append(s if s in axes else None)
+    return P(*clean)
+
+
+def shard_hint(x: jnp.ndarray, spec: Tuple[Optional[str], ...]) -> jnp.ndarray:
+    """with_sharding_constraint if a mesh is active, else identity."""
+    if _ACTIVE_MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACTIVE_MESH, _filter_spec(spec)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules.  Matched by parameter *path* (joined with '/').
+# First match wins; specs written for the 3-D mesh and auto-filtered for
+# the 2-D (single-pod) mesh.
+# ---------------------------------------------------------------------------
+# (regex, spec) — spec dims align to the parameter's trailing dims; the
+# leading scan-stack dim (layers) is added automatically when present.
+#
+# MoE expert-weight placement is switchable (the §Perf collective-term
+# hillclimb):
+#   "fsdp" (paper-faithful EP baseline): experts over 'model', expert ff
+#          dim FSDP-sharded over 'data' -> per-layer weight all-gathers.
+#   "ep2d": experts over 'data', ff dim over 'model' -> weights stay put;
+#          the (much smaller) token dispatch rides the all-to-all.
+MOE_MODES: Dict[str, Tuple[Tuple[str, Tuple], ...]] = {
+    "fsdp": (
+        (r"mlp/(gate|up)$", ("model", None, "data")),
+        (r"mlp/down$", ("model", "data", None)),
+    ),
+    "ep2d": (
+        (r"mlp/(gate|up)$", ("data", None, "model")),
+        (r"mlp/down$", ("data", "model", None)),
+    ),
+}
+_MOE_MODE = "fsdp"
+
+
+def set_moe_mode(mode: str) -> None:
+    global _MOE_MODE
+    assert mode in MOE_MODES, mode
+    _MOE_MODE = mode
+
+
+def _rules() -> Tuple[Tuple[str, Tuple], ...]:
+    return (
+        # embeddings: vocab sharded over model TP
+        (r"embed/table$", ("model", None)),
+        # attention projections: [d, H*hd] -> shard output heads over model
+        (r"attn/w[qkv]/w$", (None, "model")),
+        (r"attn/wo/w$", ("model", None)),
+        # dense FFN: inner dim over model
+        (r"mlp/(gate|up)/w$", (None, "model")),
+        (r"mlp/down/w$", ("model", None)),
+        # MoE: mode-dependent (see MOE_MODES)
+        (r"mlp/router$", (None, None)),
+    ) + MOE_MODES[_MOE_MODE] + (
+        # Mamba2: inner projections over model
+        (r"mamba/in_proj/w$", (None, "model")),
+        (r"mamba/out_proj/w$", ("model", None)),
+        (r"mamba/conv_w$", (None, "model")),
+        (r"mamba/(A_log|D|dt_bias)$", (None,)),
+        # norms: replicated
+        (r"(ln1|ln2|ln|final_norm)/scale$", (None,)),
+    )
+
+
+def _axis_size(axis) -> int:
+    if _ACTIVE_MESH is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= _ACTIVE_MESH.shape.get(a, 1)
+        return n
+    return _ACTIVE_MESH.shape.get(axis, 1)
+
+
+def _spec_for_path(path: str, shape: Tuple[int, ...]) -> P:
+    for pat, spec in _rules():
+        if re.search(pat, path):
+            pad = len(shape) - len(spec)
+            full = _filter_spec((None,) * pad + tuple(spec))
+            # drop axes the dim size cannot divide (e.g. odd vocab sizes)
+            clean = [s if (s is None or shape[i] % _axis_size(s) == 0) else None
+                     for i, s in enumerate(tuple(full))]
+            return P(*clean)
+    return P()  # replicate
+
+
+def _flatten_paths(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_paths(v, f"{prefix}/{k}" if prefix else k))
+    elif isinstance(tree, tuple):
+        for i, v in enumerate(tree):
+            out.update(_flatten_paths(v, f"{prefix}/{i}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def param_specs(params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching a params (shape) pytree."""
+    global _ACTIVE_MESH
+    prev, _ACTIVE_MESH = _ACTIVE_MESH, mesh
+
+    def one(path_elems, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path_elems)
+        return _spec_for_path(path, tuple(leaf.shape))
+
+    try:
+        return jax.tree_util.tree_map_with_path(one, params_shape)
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def param_shardings(params_shape: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh))
+
+
+def zero_specs(opt_shapes: Any, params_shape: Any, mesh: Mesh) -> Any:
+    """ZeRO-style optimizer-state sharding: m/v follow the param spec and
+    additionally shard over 'data' (extending the param's model-sharded
+    dim to ('model','data') when divisible, else sharding the largest
+    replicated dim over 'data').  The step counter is replicated."""
+    pspecs = param_specs(params_shape, mesh)
+    data = mesh.shape.get("data", 1)
+
+    def one(spec: P, leaf) -> P:
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+
+        def uses(axis) -> bool:
+            return any(axis == d or (isinstance(d, tuple) and axis in d)
+                       for d in dims)
+
+        if uses("data"):  # already data-sharded (e.g. MoE expert ff dim)
+            return P(*dims)
+        # try extending the model-sharded dim
+        for i, s in enumerate(dims):
+            if s == "model" and leaf.shape[i] % (mesh.shape["model"] * data) == 0:
+                dims[i] = ("model", "data")
+                return P(*dims)
+        # else shard the largest replicated dim over data
+        best, bi = 0, None
+        for i, s in enumerate(dims):
+            if s is None and leaf.shape[i] % data == 0 and leaf.shape[i] > best:
+                best, bi = leaf.shape[i], i
+        if bi is not None and best >= data:
+            dims[bi] = "data"
+        return P(*dims)
+
+    mv = jax.tree_util.tree_map(one, pspecs, params_shape)
+    import repro.optim.adamw as adamw
+    return adamw.AdamWState(step=P(), m=mv, v=mv)
+
+
+def zero_shardings(opt_shapes: Any, params_shape: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        zero_specs(opt_shapes, params_shape, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Global batch sharded over every data-parallel axis present."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def batch_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    spec = batch_spec(mesh)
+    return NamedSharding(mesh, P(*(tuple(spec) + (None,) * (ndim - 1))))

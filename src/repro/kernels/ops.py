@@ -1,0 +1,78 @@
+"""jit'd public wrappers for the Pallas kernels: padding to tile
+boundaries, budget-driven tile selection (the CaMDN candidate bridge),
+and the interpret-mode switch (CPU validation vs TPU execution)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vmem import TileConfig, candidates_for_matmul, select_tile
+from repro.kernels.block_fused_ffn import block_fused_ffn
+from repro.kernels.cache_matmul import cache_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_chunk
+
+ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+INTERPRET = not ON_TPU
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("pages", "interpret"))
+def budgeted_matmul(a: jnp.ndarray, b: jnp.ndarray, pages: int = 64,
+                    interpret: bool = INTERPRET) -> jnp.ndarray:
+    """Matmul through the tile candidate selected for a page budget —
+    the serving-path entry point used by launch/serve.py."""
+    m, k = a.shape
+    _, n = b.shape
+    cands = candidates_for_matmul(m, n, k, a.dtype.itemsize)
+    tile = select_tile(cands, pages)
+    ap = _pad_to(_pad_to(a, 0, tile.bm), 1, tile.bk)
+    bp = _pad_to(_pad_to(b, 0, tile.bk), 1, tile.bn)
+    out = cache_matmul(ap, bp, tile, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def attention(q, k, v, causal: bool = True, block_q: int = 128,
+              block_kv: int = 128, interpret: bool = INTERPRET):
+    S = q.shape[2]
+    bq = min(block_q, S)
+    bkv = min(block_kv, k.shape[2])
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bkv)
+    vp = _pad_to(v, 2, bkv)
+    out = flash_attention(qp, kp, vp, causal=causal, block_q=bq,
+                          block_kv=bkv, interpret=interpret)
+    return out[:, :, :S, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_f",
+                                             "interpret"))
+def fused_ffn(x, wg, wu, wd, block_s: int = 256, block_f: int = 512,
+              interpret: bool = INTERPRET):
+    S = x.shape[0]
+    bs = min(block_s, S)
+    xp = _pad_to(x, 0, bs)
+    out = block_fused_ffn(xp, wg, wu, wd, block_s=bs,
+                          block_f=min(block_f, wg.shape[1]),
+                          interpret=interpret)
+    return out[:S]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_intra_chunk(x, dt, A, B, C, chunk: int = 256,
+                    interpret: bool = INTERPRET):
+    return ssd_chunk(x, dt, A, B, C, chunk, interpret=interpret)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, sm_scale=None) -> jnp.ndarray:
+    """q: [B,H,S,hd]; k/v: [B,Hkv,S,hd] (GQA via head repeat)."""
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    groups = H // Hkv
+    k = jnp.repeat(k, groups, axis=1)
+    v = jnp.repeat(v, groups, axis=1)
+    sm = sm_scale if sm_scale is not None else hd ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * sm
+    if causal:
+        mask = jnp.tril(jnp.ones((S, k.shape[2]), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def ffn_ref(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+            wd: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.dot(h, wd, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def ssd_chunk_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                  B: jnp.ndarray, C: jnp.ndarray, chunk: int):
+    """Reference for kernels/ssd_scan.ssd_chunk (fp32 outputs)."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    n_c = S // chunk
+    xr = x.reshape(BH, n_c, chunk, P).astype(jnp.float32)
+    dtr = dt.reshape(BH, n_c, chunk).astype(jnp.float32)
+    Br = B.reshape(BH, n_c, chunk, N).astype(jnp.float32)
+    Cr = C.reshape(BH, n_c, chunk, N).astype(jnp.float32)
+    dA = -dtr * A[:, None, None]
+    cum = jnp.cumsum(dA, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)
+    w = scores * L * dtr[:, :, None, :]
+    y = jnp.einsum("bcij,bcjp->bcip", w, xr).reshape(BH, S, P)
+    decay_out = jnp.exp(cum[..., -1:] - cum)
+    states = jnp.einsum("bcq,bcqn,bcqp->bcnp", decay_out * dtr, Br, xr)
+    return y, states

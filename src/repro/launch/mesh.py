@@ -1,0 +1,29 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Functions, not module-level constants: importing this module never
+touches jax device state (so smoke tests see 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants (roofline terms, benchmarks/roofline.py)
+PEAK_BF16_FLOPS = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~4 links usable / chip)
+CHIPS_PER_POD = 256
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke runs (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,114 @@
+"""Attention: GQA with RoPE, causal/bidirectional/sliding-window masks,
+KV-cache decode, and optional cross-attention (encoder-decoder).
+
+The jnp path here is the reference; kernels/flash_attention.py provides
+the Pallas TPU variant (selected via ``use_pallas``) validated against
+this code in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+from repro.models.layers import (Params, apply_rope, init_linear, linear)
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(kq, d, cfg.num_heads * hd, cfg.jdtype),
+        "wk": init_linear(kk, d, cfg.num_kv_heads * hd, cfg.jdtype),
+        "wv": init_linear(kv, d, cfg.num_kv_heads * hd, cfg.jdtype),
+        "wo": init_linear(ko, cfg.num_heads * hd, d, cfg.jdtype),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n: int, hd: int) -> jnp.ndarray:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _mask_bias(q_len: int, kv_len: int, causal: bool, window: int,
+               q_offset: jnp.ndarray | int = 0) -> jnp.ndarray:
+    """[q_len, kv_len] additive bias; q_offset = absolute pos of query 0."""
+    qpos = jnp.arange(q_len)[:, None] + q_offset
+    kpos = jnp.arange(kv_len)[None, :]
+    ok = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+        positions: Optional[jnp.ndarray] = None,
+        causal: bool = True,
+        kv_cache: Optional[Dict[str, jnp.ndarray]] = None,
+        cache_index: Optional[jnp.ndarray] = None,
+        xattn_kv: Optional[jnp.ndarray] = None,
+        ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """GQA attention.
+
+    x: [B, S, d].  Training/prefill: kv_cache None -> self-attention over
+    x.  Decode: kv_cache {"k","v"} [B, L, Hkv, hd] + cache_index scalar
+    position -> one-step attention, returns the updated cache.
+    Cross-attention: xattn_kv [B, L_enc, d] (keys/values from encoder;
+    no cache update, no RoPE on k).
+    """
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    if positions is None:
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    q = _split_heads(linear(params["wq"], x), H, hd)          # [B,S,H,hd]
+
+    if xattn_kv is not None:
+        k = _split_heads(linear(params["wk"], xattn_kv), Hkv, hd)
+        v = _split_heads(linear(params["wv"], xattn_kv), Hkv, hd)
+        bias = jnp.zeros((S, k.shape[1]), jnp.float32)
+        new_cache = None
+    else:
+        k = _split_heads(linear(params["wk"], x), Hkv, hd)
+        v = _split_heads(linear(params["wv"], x), Hkv, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if kv_cache is not None:
+            assert cache_index is not None
+            k = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, 0, axis=1) \
+                if False else kv_cache["k"].at[:, cache_index, :, :].set(k[:, 0])
+            v = kv_cache["v"].at[:, cache_index, :, :].set(v[:, 0])
+            new_cache = {"k": k, "v": v}
+            L = k.shape[1]
+            kpos = jnp.arange(L)
+            ok = kpos[None, :] <= cache_index
+            if cfg.sliding_window > 0:
+                ok &= kpos[None, :] > cache_index - cfg.sliding_window
+            bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)  # [1, L]
+        else:
+            new_cache = None
+            bias = _mask_bias(S, S, causal, cfg.sliding_window)
+
+    # grouped heads: fold group dim into einsum
+    groups = H // Hkv
+    qg = q.reshape(B, q.shape[1], Hkv, groups, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5) + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bkgqs,bskh->bqkgh", probs, v,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    ctx = ctx.reshape(B, ctx.shape[1], H * hd)
+    out = linear(params["wo"], ctx)
+    return out, new_cache
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=None) -> Dict[str, jnp.ndarray]:
+    dt = dtype or cfg.jdtype
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

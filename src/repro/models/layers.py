@@ -1,0 +1,96 @@
+"""Primitive layers (pure-functional, no framework dependency).
+
+Parameters are plain nested dicts of jnp arrays; ``init_*`` builds them,
+``apply``-style functions consume them.  All matmul-bearing layers
+accept a ``dot`` override so the serving runtime can swap in the Pallas
+cache_matmul kernel variant chosen by the CaMDN allocator.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+DotFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def default_dot(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...k,kn->...n", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- init --
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype) -> Params:
+    return {"w": _normal(key, (d_in, d_out), 1.0 / math.sqrt(d_in), dtype)}
+
+
+def init_norm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": _normal(key, (vocab, d), 1.0, dtype)}
+
+
+# --------------------------------------------------------------- apply --
+def rms_norm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def linear(params: Params, x: jnp.ndarray, dot: DotFn = default_dot) -> jnp.ndarray:
+    return dot(x, params["w"])
+
+
+def embed(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,vd->...v", x, params["table"],
+                      preferred_element_type=jnp.float32)
+
+
+def swiglu(wi_gate: Params, wi_up: Params, wo: Params, x: jnp.ndarray,
+           dot: DotFn = default_dot) -> jnp.ndarray:
+    g = linear(wi_gate, x, dot)
+    u = linear(wi_up, x, dot)
+    return linear(wo, jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u, dot)
+
+
+def init_ffn(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": init_linear(k1, d_model, d_ff, dtype),
+            "up": init_linear(k2, d_model, d_ff, dtype),
+            "down": init_linear(k3, d_ff, d_model, dtype)}
+
+
+def ffn(params: Params, x: jnp.ndarray, dot: DotFn = default_dot) -> jnp.ndarray:
+    return swiglu(params["gate"], params["up"], params["down"], x, dot)
+
+
+# ---------------------------------------------------------------- RoPE --
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

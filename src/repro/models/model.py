@@ -1,0 +1,193 @@
+"""Public model API: init / train_step / serve steps / input_specs.
+
+``input_specs(cfg, shape)`` yields ShapeDtypeStruct stand-ins for every
+input of the step function named by the shape kind — the dry-run lowers
+against these with zero allocation:
+
+  train_*    -> train_step(params, opt_state, batch)
+  prefill_*  -> prefill(params, batch)
+  decode_* / long_* -> serve_decode(params, caches, token, index)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+from repro.models.transformer import (decode_step, encode, init_caches,
+                                      init_lm, lm_forward)
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k ctx needs sub-quadratic attn"
+    return True, ""
+
+
+# --------------------------------------------------------------- steps --
+def init_params(cfg: ArchConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return init_lm(key, cfg)
+
+
+def mask_padded_logits(logits, cfg: ArchConfig):
+    """Neutralize the Megatron-style vocab-padding rows (base.py
+    padded_vocab) so they never win argmax / enter logsumexp."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(ids < cfg.vocab_size, logits, -1e30)
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    prefix = batch.get("embeds_prefix")
+    logits, aux = lm_forward(params, batch["tokens"], cfg,
+                             embeds_prefix=prefix, remat=True)
+    # next-token CE over the token positions only (prefix positions are
+    # conditioning context)
+    if prefix is not None and cfg.family != "encdec":
+        logits = logits[:, prefix.shape[1]:, :]
+    labels = batch["labels"]
+    logits = mask_padded_logits(logits[:, :-1, :].astype(jnp.float32), cfg)
+    tgt = labels[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: Optional[adamw.AdamWConfig] = None,
+                    microbatches: int = 1):
+    """Training step; ``microbatches > 1`` accumulates gradients over a
+    lax.scan of micro-steps — each micro-step's gradient reduction can
+    overlap the next micro-step's compute (XLA schedules the per-bucket
+    all-reduces asynchronously), the standard compute/comm overlap trick
+    for large global batches."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch, cfg)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_step(carry, mb):
+                (loss, metrics), g = grad_fn(params, mb, cfg)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), carry[0], g)
+                return (gsum, carry[1] + loss), metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), ms = jax.lax.scan(acc_step, (zeros, 0.0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+        params, opt_state, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill(cfg: ArchConfig):
+    def prefill(params, batch):
+        prefix = batch.get("embeds_prefix")
+        logits, _ = lm_forward(params, batch["tokens"], cfg,
+                               embeds_prefix=prefix)
+        return logits[:, -1, :]
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    def serve_decode(params, caches, token, index, enc_out=None):
+        logits, caches = decode_step(params, token, caches, index, cfg,
+                                     enc_out=enc_out)
+        logits = mask_padded_logits(logits, cfg)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), caches
+    return serve_decode
+
+
+# ---------------------------------------------------------- input specs --
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the data batch of a train/prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    out: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        out["embeds_prefix"] = _sds((B, cfg.enc_len, d), jnp.float32)
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["labels"] = _sds((B, S), jnp.int32)
+        return out
+    if cfg.family == "vlm":
+        P = cfg.num_patches
+        out["embeds_prefix"] = _sds((B, P, d), jnp.float32)
+        out["tokens"] = _sds((B, S - P), jnp.int32)
+        out["labels"] = _sds((B, S - P), jnp.int32)
+        return out
+    out["tokens"] = _sds((B, S), jnp.int32)
+    out["labels"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: init_caches(None, cfg, batch, max_len))
+
+
+def param_specs_shapes(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_specs_shapes(params_shapes):
+    return jax.eval_shape(adamw.init, params_shapes)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """All step-function inputs as ShapeDtypeStructs, keyed by arg name."""
+    params = param_specs_shapes(cfg)
+    if shape.kind == "train":
+        return {"params": params,
+                "opt_state": opt_specs_shapes(params),
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params, "batch": batch_specs(cfg, shape)}
+    # decode: one new token against caches of length seq_len
+    B = shape.global_batch
+    out = {"params": params,
+           "caches": cache_specs(cfg, B, shape.seq_len),
+           "token": _sds((B, 1), jnp.int32),
+           "index": _sds((), jnp.int32)}
+    if cfg.family == "encdec":
+        out["enc_out"] = _sds((B, cfg.enc_len, cfg.d_model), cfg.jdtype)
+    return out

@@ -1,0 +1,101 @@
+"""Mixture-of-Experts layer: top-k routing with capacity buckets,
+sort-based dispatch (no one-hot matmul, so HLO FLOPs stay honest), and
+EP-friendly layouts.
+
+Sharding intent (see distributed/sharding.py): tokens [G, T, d] with the
+group axis G on the 'data' mesh axis; dispatch buffers [G, E, C, d] with
+E on 'model'; expert weights [E, d, f] on ('model', None, None-or-'data')
+— the GSPMD partitioner inserts the token all-to-all between the
+scatter and the expert einsum.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.base import ArchConfig
+from repro.models.layers import Params, _normal
+
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    s = 1.0 / (d ** 0.5)
+    return {
+        "router": _normal(kr, (d, e), s, cfg.jdtype),
+        "gate": _normal(kg, (e, d, f), s, cfg.jdtype),
+        "up": _normal(ku, (e, d, f), s, cfg.jdtype),
+        "down": _normal(kd, (e, f, d), 1.0 / (f ** 0.5), cfg.jdtype),
+    }
+
+
+def capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    c = int(tokens_per_group * cfg.experts_per_token
+            * cfg.moe_capacity_factor / cfg.num_experts) + 1
+    return max(4, -(-c // 4) * 4)  # pad to a multiple of 4
+
+
+def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [G, T, d] -> (y: [G, T, d], aux_loss scalar).
+
+    Per group: route, rank tokens within each expert by sort, drop
+    overflow beyond capacity C, scatter to [E*C, d], run experts,
+    gather-combine with router weights.
+    """
+    G, T, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = capacity(T, cfg)
+
+    logits = jnp.einsum("gtd,de->gte", x, params["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                     # [G,T,K]
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                                # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (G * T * K))
+    aux = E * jnp.sum(me * ce)
+
+    def dispatch_group(xg, eg, pg):
+        # xg [T,d]; eg,pg [T,K]
+        flat_e = eg.reshape(-1)                                 # [T*K]
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        # rank within expert = position - first index of that expert
+        first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        rank = jnp.arange(T * K) - first
+        keep = rank < C
+        slot = jnp.where(keep, sorted_e * C + rank, E * C)      # E*C = drop bin
+        tok = order // K                                        # token index
+        buf = jnp.zeros((E * C + 1, d), xg.dtype).at[slot].add(xg[tok])
+        return buf[:-1].reshape(E, C, d), order, slot, keep, tok
+
+    buf, order, slot, keep, tok = jax.vmap(dispatch_group)(x, top_e, top_p)
+    # buf: [G, E, C, d] — pin the EP layout so the scatter partitions as
+    # a token all-to-all (G on data, E on model) instead of GSPMD
+    # falling back to full-buffer all-reduces
+    buf = shard_hint(buf, ("data", "model", None, None))
+    h_g = jnp.einsum("gecd,edf->gecf", buf, params["gate"],
+                     preferred_element_type=jnp.float32)
+    h_u = jnp.einsum("gecd,edf->gecf", buf, params["up"],
+                     preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(h_g) * h_u).astype(x.dtype)
+    out = jnp.einsum("gecf,efd->gecd", h, params["down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = shard_hint(out, ("data", "model", None, None))
+
+    def combine_group(out_g, order_g, slot_g, keep_g, tok_g, pg):
+        flat = out_g.reshape(E * C, d)
+        vals = jnp.where(keep_g[:, None], flat[jnp.minimum(slot_g, E * C - 1)], 0.0)
+        w = pg.reshape(-1)[order_g][:, None].astype(vals.dtype)
+        y = jnp.zeros((T, d), vals.dtype).at[tok_g].add(vals * w)
+        return y
+
+    y = jax.vmap(combine_group)(out, order, slot, keep, tok, top_p)
+    return y.astype(x.dtype), aux

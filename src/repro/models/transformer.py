@@ -1,0 +1,277 @@
+"""Composable LM assembly: dense / MoE / SSM / hybrid decoder stacks and
+the Whisper-style encoder-decoder, with scan-over-layers (compact HLO,
+essential for the 512-device dry-run) and optional remat.
+
+Layer stacks are homogeneous *groups* so params stack cleanly for
+``lax.scan``:
+  dense/moe : one group = 1 x (attn + ffn/moe)          x num_layers
+  ssm       : one group = 1 x mamba2                    x num_layers
+  hybrid    : one group = (attn_every-1) x mamba2 + 1 x (attn + ffn)
+              x (num_layers / attn_every)   (Zamba2-style shared attn)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.attention import init_attention, init_kv_cache, mha
+from repro.models.base import ArchConfig
+from repro.models.layers import (Params, embed, ffn, init_embedding, init_ffn,
+                                 init_norm, rms_norm, unembed)
+from repro.models.moe import init_moe, moe_apply
+from repro.models.ssm import (init_mamba2, init_ssm_state, mamba2_forward,
+                              ssd_decode_step)
+
+
+# Lowering knob: the dry-run sets this to 2 to measure per-layer HLO
+# cost via the unroll-delta method (cost_analysis counts a while-loop
+# body once regardless of trip count; see launch/hlo_analysis.py).
+_SCAN_UNROLL = 1
+_REMAT_POLICY = "full"   # "full" | "dots" (save matmul outputs)
+
+
+def set_scan_unroll(u: int) -> None:
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = max(1, int(u))
+
+
+def set_remat_policy(p: str) -> None:
+    global _REMAT_POLICY
+    assert p in ("full", "dots"), p
+    _REMAT_POLICY = p
+
+
+# ---------------------------------------------------------------- init --
+def _stack_init(fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_dense_layer(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": init_norm(cfg.d_model, cfg.jdtype),
+         "attn": init_attention(k1, cfg),
+         "ln2": init_norm(cfg.d_model, cfg.jdtype)}
+    p["mlp"] = init_moe(k2, cfg) if cfg.is_moe else init_ffn(
+        k2, cfg.d_model, cfg.d_ff, cfg.jdtype)
+    return p
+
+
+def init_ssm_layer(key, cfg: ArchConfig) -> Params:
+    return {"ln1": init_norm(cfg.d_model, cfg.jdtype),
+            "mamba": init_mamba2(key, cfg)}
+
+
+def init_hybrid_group(key, cfg: ArchConfig) -> Params:
+    # Zamba2-style: the attention block is SHARED across all groups (one
+    # set of weights, stored once at the top level) — only the Mamba2
+    # layers are per-group.
+    n_ssm = cfg.attn_every - 1
+    return {"ssm": _stack_init(lambda k: init_ssm_layer(k, cfg), key, n_ssm)}
+
+
+def num_groups(cfg: ArchConfig) -> int:
+    if cfg.family == "hybrid":
+        assert cfg.num_layers % cfg.attn_every == 0
+        return cfg.num_layers // cfg.attn_every
+    return cfg.num_layers
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    ke, kl, ku = jax.random.split(key, 3)
+    if cfg.family == "hybrid":
+        group_fn = lambda k: init_hybrid_group(k, cfg)
+    elif cfg.family == "ssm":
+        group_fn = lambda k: init_ssm_layer(k, cfg)
+    else:
+        group_fn = lambda k: init_dense_layer(k, cfg)
+    params = {
+        "embed": init_embedding(ke, cfg.padded_vocab, cfg.d_model, cfg.jdtype),
+        "layers": _stack_init(group_fn, kl, num_groups(cfg)),
+        "final_norm": init_norm(cfg.d_model, cfg.jdtype),
+    }
+    if cfg.family == "hybrid":
+        params["shared_attn"] = init_dense_layer(
+            jax.random.fold_in(kl, 7), cfg)
+    if cfg.family == "encdec":
+        kenc, kx = jax.random.split(ku)
+        params["encoder"] = {
+            "layers": _stack_init(lambda k: init_dense_layer(k, cfg), kenc,
+                                  cfg.enc_layers),
+            "final_norm": init_norm(cfg.d_model, cfg.jdtype),
+        }
+        params["xattn"] = _stack_init(
+            lambda k: {"ln": init_norm(cfg.d_model, cfg.jdtype),
+                       "attn": init_attention(k, cfg)},
+            kx, num_groups(cfg))
+    return params
+
+
+# ------------------------------------------------------------- blocks --
+def _dense_block(p: Params, x, cfg: ArchConfig, *, causal=True, kv_cache=None,
+                 cache_index=None, positions=None, xattn_kv=None, xp=None):
+    h, new_cache = mha(p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps), cfg,
+                       causal=causal, kv_cache=kv_cache,
+                       cache_index=cache_index, positions=positions)
+    x = x + h
+    aux = 0.0
+    if xp is not None:  # cross-attention (enc-dec decoder)
+        hx, _ = mha(xp["attn"], rms_norm(xp["ln"], x, cfg.norm_eps), cfg,
+                    causal=False, xattn_kv=xattn_kv)
+        x = x + hx
+    y = rms_norm(p["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        out, aux = moe_apply(p["mlp"], y, cfg)
+    else:
+        out = ffn(p["mlp"], y)
+    return x + out, new_cache, aux
+
+
+def _ssm_block(p: Params, x, cfg: ArchConfig, state=None, decode=False):
+    y = rms_norm(p["ln1"], x, cfg.norm_eps)
+    if decode:
+        out, new_state = ssd_decode_step(p["mamba"], y, cfg, state)
+    else:
+        out, new_state = mamba2_forward(p["mamba"], y, cfg, state)
+    return x + out, new_state
+
+
+# ------------------------------------------------------------ forward --
+def lm_forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig, *,
+               embeds_prefix: Optional[jnp.ndarray] = None,
+               remat: bool = False,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training / prefill forward.  tokens: [B, S] -> logits [B, S, V].
+
+    ``embeds_prefix`` [B, P, d] (VLM patches / audio frames) is
+    prepended to the token embeddings; logits cover the full sequence.
+    Returns (logits, moe_aux_loss).
+    """
+    x = embed(params["embed"], tokens)
+    if embeds_prefix is not None:
+        x = jnp.concatenate([embeds_prefix.astype(x.dtype), x], axis=1)
+    x = shard_hint(x, ("data", None, None))
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(params, embeds_prefix if embeds_prefix is not None
+                         else x, cfg)
+        x = embed(params["embed"], tokens)  # decoder stream = tokens only
+        x = shard_hint(x, ("data", None, None))
+        positions = jnp.arange(x.shape[1])[None, :]
+
+    def group_fn(carry, gp):
+        x, aux = carry
+        if cfg.family == "hybrid":
+            def ssm_step(xc, sp):
+                y, _ = _ssm_block(sp, xc, cfg)
+                return y, None
+            x, _ = jax.lax.scan(ssm_step, x, gp["ssm"],
+                                unroll=max(1, cfg.attn_every - 1))
+            x, _, a = _dense_block(params["shared_attn"], x, cfg,
+                                   positions=positions)
+            aux = aux + a
+        elif cfg.family == "ssm":
+            x, _ = _ssm_block(gp, x, cfg)
+        elif cfg.family == "encdec":
+            lp, xp = gp
+            x, _, a = _dense_block(lp, x, cfg, positions=positions,
+                                   xattn_kv=enc_out, xp=xp)
+            aux = aux + a
+        else:
+            x, _, a = _dense_block(gp, x, cfg, positions=positions)
+            aux = aux + a
+        x = shard_hint(x, ("data", None, None))
+        return (x, aux), None
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if _REMAT_POLICY == "dots" else None)
+        fn = jax.checkpoint(group_fn, prevent_cse=False, policy=policy)
+    else:
+        fn = group_fn
+    layer_stack = params["layers"] if cfg.family != "encdec" else (
+        params["layers"], params["xattn"])
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), layer_stack,
+                               unroll=_SCAN_UNROLL)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, aux
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Bidirectional encoder over precomputed frame embeddings."""
+    x = frames.astype(cfg.jdtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def step(x, lp):
+        y, _, _ = _dense_block(lp, x, cfg, causal=False, positions=positions)
+        return y, None
+
+    x, _ = jax.lax.scan(step, x, params["encoder"]["layers"],
+                        unroll=_SCAN_UNROLL)
+    return rms_norm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+# -------------------------------------------------------------- decode --
+def init_caches(params: Params, cfg: ArchConfig, batch: int, max_len: int):
+    """Stacked per-group decode caches."""
+    G = num_groups(cfg)
+
+    def one(_):
+        if cfg.family == "hybrid":
+            return {"ssm": jax.vmap(lambda _: init_ssm_state(cfg, batch))(
+                        jnp.arange(cfg.attn_every - 1)),
+                    "attn": init_kv_cache(cfg, batch, max_len)}
+        if cfg.family == "ssm":
+            return init_ssm_state(cfg, batch)
+        return init_kv_cache(cfg, batch, max_len)
+
+    return jax.vmap(one)(jnp.arange(G))
+
+
+def decode_step(params: Params, token: jnp.ndarray, caches, index: jnp.ndarray,
+                cfg: ArchConfig, enc_out: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Any]:
+    """One decode step.  token: [B, 1] int32; index: scalar position.
+    Returns (logits [B, 1, V], updated caches)."""
+    x = embed(params["embed"], token)
+    positions = jnp.full((1, 1), index, jnp.int32)
+
+    def group_fn(x, scan_in):
+        if cfg.family == "encdec":
+            (gp, xp), cache = scan_in
+        else:
+            gp, cache = scan_in
+            xp = None
+        if cfg.family == "hybrid":
+            def ssm_step(xc, sp_state):
+                sp, st = sp_state
+                y, new_st = _ssm_block(sp, xc, cfg, state=st, decode=True)
+                return y, new_st
+            x, new_ssm = jax.lax.scan(ssm_step, x, (gp["ssm"], cache["ssm"]),
+                                      unroll=max(1, cfg.attn_every - 1))
+            x, new_kv, _ = _dense_block(params["shared_attn"], x, cfg,
+                                        kv_cache=cache["attn"],
+                                        cache_index=index, positions=positions)
+            return x, {"ssm": new_ssm, "attn": new_kv}
+        if cfg.family == "ssm":
+            x, new_state = _ssm_block(gp, x, cfg, state=cache, decode=True)
+            return x, new_state
+        x, new_kv, _ = _dense_block(gp, x, cfg, kv_cache=cache,
+                                    cache_index=index, positions=positions,
+                                    xattn_kv=enc_out, xp=xp)
+        return x, new_kv
+
+    layer_stack = params["layers"] if cfg.family != "encdec" else (
+        params["layers"], params["xattn"])
+    x, new_caches = jax.lax.scan(group_fn, x, (layer_stack, caches),
+                                 unroll=_SCAN_UNROLL)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, new_caches

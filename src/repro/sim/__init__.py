@@ -1,0 +1,14 @@
+"""Event-driven multi-tenant NPU/cache simulator (paper Section IV)."""
+from repro.sim.driver import (MultiTenantSim, SimConfig, SimResult,
+                              TaskResult, isolated_latencies)
+from repro.sim.engine import CorePool, DramResource, Engine
+from repro.sim.schedulers import (SCHEDULERS, TransparentParams,
+                                  transparent_layer_dram, transparent_plan)
+from repro.sim.workloads import benchmark_models
+
+__all__ = [
+    "MultiTenantSim", "SimConfig", "SimResult", "TaskResult",
+    "isolated_latencies", "Engine", "DramResource", "CorePool",
+    "SCHEDULERS", "TransparentParams", "transparent_plan",
+    "transparent_layer_dram", "benchmark_models",
+]

@@ -1,0 +1,413 @@
+"""Multi-tenant simulation driver: wires the event engine, the DRAM
+processor-sharing pool, the NPU core pool, the CaMDN runtime (or a
+transparent-LLC baseline) and the metrics together.
+
+Usage:
+    sim = MultiTenantSim(models=[...], scheduler="camdn")
+    result = sim.run(duration_s=0.2)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.allocator import DynamicCacheAllocator
+from repro.core.cache import CacheConfig, SharedCache
+from repro.core.mapping import MapperConfig
+from repro.core.nec import Nec, Traffic
+from repro.core.runtime import TenantModel, TenantTask
+from repro.core.types import ModelGraph
+from repro.sim.engine import CorePool, DramResource, Engine
+from repro.sim.schedulers import (SCHEDULERS, BandwidthPolicy, CorePolicy,
+                                  SchedulerSpec, TransparentParams,
+                                  transparent_layer_dram, transparent_plan)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+    n_cores: int = 16
+    dram_bps: float = 102.4e9
+    mapper: MapperConfig = dataclasses.field(default_factory=MapperConfig)
+    qos_level: float = 1.0           # x latency target (0.8=H, 1.0=M, 1.2=L)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TaskResult:
+    task_id: str
+    model: str
+    qos_ms: float
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    deadline_met: int = 0
+    inferences: int = 0
+    traffic: Traffic = dataclasses.field(default_factory=Traffic)
+
+    @property
+    def dram_per_inference(self) -> float:
+        return self.traffic.dram_total / self.inferences if self.inferences else 0.0
+
+    @property
+    def avg_latency(self) -> float:
+        return sum(self.latencies) / len(self.latencies) if self.latencies else math.inf
+
+    @property
+    def sla_rate(self) -> float:
+        return self.deadline_met / self.inferences if self.inferences else 0.0
+
+
+@dataclasses.dataclass
+class SimResult:
+    scheduler: str
+    tasks: List[TaskResult]
+    traffic: Traffic
+    duration_s: float
+    dram_utilization: float
+
+    @property
+    def total_inferences(self) -> int:
+        return sum(t.inferences for t in self.tasks)
+
+    def avg_latency_by_model(self) -> Dict[str, float]:
+        by: Dict[str, List[float]] = {}
+        for t in self.tasks:
+            by.setdefault(t.model, []).extend(t.latencies)
+        return {m: sum(v) / len(v) for m, v in by.items() if v}
+
+    @property
+    def avg_latency(self) -> float:
+        lats = [l for t in self.tasks for l in t.latencies]
+        return sum(lats) / len(lats) if lats else math.inf
+
+    @property
+    def dram_bytes_per_inference(self) -> float:
+        n = self.total_inferences
+        return self.traffic.dram_total / n if n else 0.0
+
+    @property
+    def sla_rate(self) -> float:
+        tot = sum(t.inferences for t in self.tasks)
+        met = sum(t.deadline_met for t in self.tasks)
+        return met / tot if tot else 0.0
+
+    def stp(self, isolated: Dict[str, float]) -> float:
+        """System throughput: sum of normalized progress rates."""
+        return sum(isolated[t.model] / t.avg_latency
+                   for t in self.tasks if t.latencies)
+
+    def fairness(self, isolated: Dict[str, float]) -> float:
+        np_ = [isolated[t.model] / t.avg_latency for t in self.tasks if t.latencies]
+        return min(np_) / max(np_) if np_ else 0.0
+
+
+# ---------------------------------------------------------------------------
+class _BaseDriver:
+    """Per-task inference loop skeleton."""
+
+    def __init__(self, sim: "MultiTenantSim", task_id: str, model: TenantModel):
+        self.sim = sim
+        self.id = task_id
+        self.model = model
+        self.result = TaskResult(task_id, model.graph.name, model.graph.qos_ms)
+        self.layer_idx = 0
+        self.infer_start = 0.0
+        self.cores_held = 0
+        self._compute_done = False
+        self._dram_done = False
+        self.stopped = False
+
+    # -- inference lifecycle -------------------------------------------
+    def start(self) -> None:
+        self._begin_inference()
+
+    def _begin_inference(self) -> None:
+        if self.sim.engine.now >= self.sim.horizon:
+            self.stopped = True
+            return
+        cores = self._cores_wanted()
+        self.sim.cores.acquire(cores, lambda: self._on_cores(cores))
+
+    def _on_cores(self, cores: int) -> None:
+        self.cores_held = cores
+        self.infer_start = self.sim.engine.now
+        self.layer_idx = 0
+        self.sim.active_tasks += 1
+        self._enter_layer()
+
+    def _finish_inference(self) -> None:
+        now = self.sim.engine.now
+        lat = now - self.infer_start
+        self.result.latencies.append(lat)
+        self.result.inferences += 1
+        target = self.result.qos_ms * 1e-3 * self.sim.config.qos_level
+        if lat <= target:
+            self.result.deadline_met += 1
+        self.sim.active_tasks -= 1
+        self.sim.cores.release(self.cores_held)
+        self.cores_held = 0
+        self._begin_inference()
+
+    # -- layer lifecycle (subclass hooks) --------------------------------
+    def _enter_layer(self) -> None:
+        raise NotImplementedError
+
+    def _execute(self, compute_s: float, dram_bytes: float) -> None:
+        self._compute_done = self._dram_done = False
+        eng = self.sim.engine
+        eng.schedule(compute_s, self._on_compute_done)
+        w = self._bw_weight()
+        # service-time inflation for the scheduler's DRAM efficiency
+        # (traffic counters stay pure byte counts)
+        eff = self.sim.spec.dram_efficiency
+        self.sim.dram.submit(dram_bytes / eff, self._on_dram_done, weight=w)
+
+    def _on_compute_done(self) -> None:
+        self._compute_done = True
+        if self._dram_done:
+            self._layer_done()
+
+    def _on_dram_done(self) -> None:
+        self._dram_done = True
+        if self._compute_done:
+            self._layer_done()
+
+    def _layer_done(self) -> None:
+        raise NotImplementedError
+
+    # -- policies ---------------------------------------------------------
+    def _slack_ratio(self) -> float:
+        target = self.result.qos_ms * 1e-3 * self.sim.config.qos_level
+        elapsed = self.sim.engine.now - self.infer_start
+        progress = max(self.layer_idx / max(1, self.model.num_layers), 0.05)
+        predicted = elapsed / progress
+        return predicted / target if target > 0 else 1.0
+
+    def _bw_weight(self) -> float:
+        return self.sim.bw_policy.weight(self._slack_ratio())
+
+    def _cores_wanted(self) -> int:
+        last = self._slack_ratio() if self.result.inferences else 1.0
+        return self.sim.core_policy.cores_for(last, self.sim.cores.free)
+
+
+class TransparentDriver(_BaseDriver):
+    """baseline / moca / aurora: transparent shared LLC."""
+
+    def __init__(self, sim, task_id, model):
+        super().__init__(sim, task_id, model)
+        self.plan = transparent_plan(model.graph, sim.config.mapper)
+
+    def _enter_layer(self) -> None:
+        i = self.layer_idx
+        rd, wr, access = transparent_layer_dram(
+            self.plan, i, self.sim.config.cache.total_bytes,
+            self.sim.distinct_active, self.sim.tparams)
+        lb = self.sim.config.cache.line_bytes
+        for t in (self.sim.traffic, self.result.traffic):
+            t.dram_read += rd
+            t.dram_write += wr
+            t.accesses += max(1, access // lb)
+            t.hits += max(0, access - rd - wr) // lb
+        comp = self.plan.compute_s[i] / max(1, self.cores_held)
+        self._execute(comp, rd + wr)
+
+    def _layer_done(self) -> None:
+        self.layer_idx += 1
+        if self.layer_idx >= self.model.num_layers:
+            self._finish_inference()
+        else:
+            self._enter_layer()
+
+
+class StaticCamdnDriver(_BaseDriver):
+    """CaMDN(HW-only): exclusive regions with an equal static page split;
+    candidate selection at the fixed quota; no borrowing, no waiting."""
+
+    def __init__(self, sim, task_id, model, quota_pages: int):
+        super().__init__(sim, task_id, model)
+        self.quota = quota_pages
+        self._lbm_until = -1  # layer index (exclusive) covered by active LBM
+
+    def _enter_layer(self) -> None:
+        i = self.layer_idx
+        mct = self.model.mapping.mcts[i]
+        cand = None
+        if mct.lbm is not None and i < self._lbm_until:
+            cand = mct.lbm
+        elif (mct.lbm is not None and self.model.mapping.is_head_of_block(i)
+              and mct.lbm.p_need <= self.quota):
+            cand = mct.lbm
+            self._lbm_until = self.model.mapping.block_of(i)[1]
+        if cand is None:
+            cand = mct.best_fit(self.quota)
+        layer = self.model.graph.layers[i]
+        if cand.kind == "LBM":
+            blk = self.model.mapping.block_of(i)
+            wr = layer.output_bytes if i == blk[1] - 1 else 0
+        else:
+            wr = layer.output_bytes
+        rd = max(0, cand.dram_bytes - wr)
+        access = self.model.stream_bytes[i]
+        lb = self.sim.config.cache.line_bytes
+        for t in (self.sim.traffic, self.result.traffic):
+            t.dram_read += rd
+            t.dram_write += wr
+            t.accesses += max(1, access // lb)
+            t.hits += max(0, access - rd - wr) // lb
+        comp = cand.flops / (self.sim.config.mapper.compute_flops * max(1, self.cores_held))
+        self._execute(comp, rd + wr)
+
+    def _layer_done(self) -> None:
+        self.layer_idx += 1
+        if self.layer_idx >= self.model.num_layers:
+            self._lbm_until = -1
+            self._finish_inference()
+        else:
+            self._enter_layer()
+
+
+class CamdnDriver(_BaseDriver):
+    """CaMDN(Full): Algorithm 1 + page waits/timeouts via core/runtime."""
+
+    def __init__(self, sim, task_id, model):
+        super().__init__(sim, task_id, model)
+        self.task = TenantTask(task_id, model, sim.cache, sim.nec, sim.allocator)
+        self._timeout_gen = 0
+        self._waiting = False
+
+    def _on_cores(self, cores: int) -> None:
+        if self.task.done:
+            self.task.reset_for_next_inference()
+        super()._on_cores(cores)
+
+    def _enter_layer(self) -> None:
+        self.task.begin_layer(self.sim.engine.now)
+        self._try_alloc()
+
+    def _try_alloc(self) -> None:
+        need = self.task.pages_to_request()
+        granted = self.sim.cache.alloc(self.id, need) if need else []
+        if granted is None:
+            if not self._waiting:
+                self._waiting = True
+                self.sim.page_waiters.append(self)
+            self._arm_timeout()
+            return
+        if self._waiting:
+            self._waiting = False
+            if self in self.sim.page_waiters:
+                self.sim.page_waiters.remove(self)
+        self._timeout_gen += 1  # cancel pending timeout
+        plan = self.task.start_execution(self.sim.engine.now, granted)
+        comp = plan.compute_s / max(1, self.cores_held)
+        self._execute(comp, plan.dram_read_bytes + plan.dram_write_bytes)
+
+    def _arm_timeout(self) -> None:
+        sel = self.task.selection
+        assert sel is not None
+        if math.isinf(sel.t_ahead):
+            return
+        self._timeout_gen += 1
+        gen = self._timeout_gen
+        self.sim.engine.at(sel.t_ahead, lambda: self._on_timeout(gen))
+
+    def _on_timeout(self, gen: int) -> None:
+        if gen != self._timeout_gen or not self._waiting:
+            return
+        self.task.on_timeout(self.sim.engine.now)
+        self._try_alloc()
+
+    def retry(self) -> None:
+        if self._waiting:
+            self._try_alloc()
+
+    def _layer_done(self) -> None:
+        self.task.end_layer(self.sim.engine.now)
+        self.sim.wake_page_waiters()
+        self.layer_idx = self.task.layer_idx
+        if self.task.done:
+            self._finish_inference()
+        else:
+            self._enter_layer()
+
+
+# ---------------------------------------------------------------------------
+class MultiTenantSim:
+    def __init__(self, models: List[ModelGraph], scheduler: str,
+                 config: Optional[SimConfig] = None,
+                 tparams: Optional[TransparentParams] = None):
+        self.config = config or SimConfig()
+        self.spec: SchedulerSpec = SCHEDULERS[scheduler]
+        self.tparams = tparams or TransparentParams()
+        self.engine = Engine()
+        self.dram = DramResource(self.engine, self.config.dram_bps)
+        self.cores = CorePool(self.engine, self.config.n_cores)
+        self.bw_policy = BandwidthPolicy(self.spec.bandwidth)
+        self.core_policy = CorePolicy(self.spec.core_scaling)
+        self.active_tasks = 0
+        self.horizon = math.inf
+        self.page_waiters: List[CamdnDriver] = []
+
+        self.cache = SharedCache(self.config.cache)
+        self.nec = Nec(self.cache)
+        self.allocator = DynamicCacheAllocator(self.cache)
+        self.traffic = Traffic()  # transparent-path accounting
+
+        self.drivers: List[_BaseDriver] = []
+        tenant_models: Dict[str, TenantModel] = {}
+        for graph in models:
+            if graph.name not in tenant_models:
+                tenant_models[graph.name] = TenantModel(graph, self.config.mapper)
+        n = len(models)
+        quota = self.config.cache.num_pages // max(1, n)
+        for idx, graph in enumerate(models):
+            tid = f"t{idx}:{graph.name}"
+            tm = tenant_models[graph.name]
+            if not self.spec.camdn_cache:
+                d: _BaseDriver = TransparentDriver(self, tid, tm)
+            elif not self.spec.dynamic_alloc:
+                d = StaticCamdnDriver(self, tid, tm, quota)
+            else:
+                d = CamdnDriver(self, tid, tm)
+            self.drivers.append(d)
+
+    @property
+    def distinct_active(self) -> int:
+        """Distinct model count among co-located tasks (same-model
+        instances share read-only weights in a transparent LLC; queued
+        tasks' data still occupies cache)."""
+        return len({d.result.model for d in self.drivers
+                    if not d.stopped}) or 1
+
+    def wake_page_waiters(self) -> None:
+        for d in list(self.page_waiters):
+            d.retry()
+
+    def run(self, duration_s: float = 0.2) -> SimResult:
+        self.horizon = duration_s
+        for d in self.drivers:
+            d.start()
+        self.engine.run(until=math.inf)
+        total = self.traffic.merged(self.nec.traffic)
+        for d in self.drivers:
+            per = self.nec.per_tenant.get(d.id)
+            if per is not None:
+                d.result.traffic = d.result.traffic.merged(per)
+        return SimResult(self.spec.name, [d.result for d in self.drivers],
+                         total, self.engine.now, self.dram.utilization)
+
+
+def isolated_latencies(models: List[ModelGraph],
+                       config: Optional[SimConfig] = None) -> Dict[str, float]:
+    """Single-tenant latency per model (transparent cache, full capacity)
+    — the normalization base for STP / fairness."""
+    out: Dict[str, float] = {}
+    for g in models:
+        if g.name in out:
+            continue
+        sim = MultiTenantSim([g], "baseline", config)
+        res = sim.run(duration_s=0.5)
+        out[g.name] = res.tasks[0].avg_latency
+    return out

@@ -1,0 +1,172 @@
+"""Discrete-event engine with a processor-sharing DRAM resource.
+
+The paper evaluates CaMDN on an in-door cycle-accurate simulator
+(DRAMsim3-based).  We model the same system at event granularity, which
+is sufficient for layer-level traffic/latency accounting: DRAM is a
+processor-sharing bandwidth pool (weights settable per job for the
+MoCA-style bandwidth schedulers); compute per NPU core is private, so a
+layer finishes at max(compute_done, dram_done).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class Engine:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        if delay < 0 or math.isnan(delay):
+            raise ValueError(f"bad delay {delay}")
+        if math.isinf(delay):
+            return  # never fires
+        heapq.heappush(self._heap, (self.now + delay, next(self._seq), fn))
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        self.schedule(max(0.0, t - self.now), fn)
+
+    def run(self, until: float = math.inf, max_events: int = 50_000_000) -> None:
+        n = 0
+        while self._heap and n < max_events:
+            t, _, fn = heapq.heappop(self._heap)
+            if t > until:
+                self.now = until
+                return
+            self.now = t
+            fn()
+            n += 1
+        if n >= max_events:
+            raise RuntimeError("event budget exhausted (livelock?)")
+
+    @property
+    def idle(self) -> bool:
+        return not self._heap
+
+
+@dataclasses.dataclass
+class _DramJob:
+    job_id: int
+    bytes_remaining: float
+    weight: float
+    on_done: Callable[[], None]
+
+
+class DramResource:
+    """Weighted processor-sharing over ``total_bps`` bytes/second.
+
+    On every membership or weight change, progress is advanced and the
+    next completion event is re-armed (generation counter invalidates
+    stale events)."""
+
+    def __init__(self, engine: Engine, total_bps: float):
+        self.engine = engine
+        self.total_bps = total_bps
+        self.jobs: Dict[int, _DramJob] = {}
+        self._ids = itertools.count()
+        self._last = 0.0
+        self._gen = 0
+        self.busy_seconds = 0.0
+        self.bytes_served = 0.0
+
+    # -- internals ------------------------------------------------------
+    def _advance(self) -> None:
+        dt = self.engine.now - self._last
+        self._last = self.engine.now
+        if dt <= 0 or not self.jobs:
+            return
+        wsum = sum(j.weight for j in self.jobs.values())
+        served = 0.0
+        for j in self.jobs.values():
+            rate = self.total_bps * j.weight / wsum
+            take = min(j.bytes_remaining, rate * dt)
+            j.bytes_remaining -= take
+            served += take
+        self.busy_seconds += dt
+        self.bytes_served += served
+
+    # Jobs with less than a cache line left are done (prevents float
+    # asymptotes); ticks are floored at 1ns so equal-timestamp re-arms
+    # can never livelock the event loop.
+    DRAIN_BYTES = 64.0
+    MIN_TICK = 1e-9
+
+    def _rearm(self) -> None:
+        self._gen += 1
+        gen = self._gen
+        if not self.jobs:
+            return
+        wsum = sum(j.weight for j in self.jobs.values())
+        eta = min(j.bytes_remaining / (self.total_bps * j.weight / wsum)
+                  for j in self.jobs.values())
+        self.engine.schedule(max(eta, self.MIN_TICK), lambda: self._on_tick(gen))
+
+    def _on_tick(self, gen: int) -> None:
+        if gen != self._gen:
+            return  # stale
+        self._advance()
+        done = [j for j in self.jobs.values()
+                if j.bytes_remaining <= self.DRAIN_BYTES]
+        for j in done:
+            del self.jobs[j.job_id]
+        self._rearm()
+        for j in done:
+            j.on_done()
+
+    # -- API -------------------------------------------------------------
+    def submit(self, nbytes: float, on_done: Callable[[], None],
+               weight: float = 1.0) -> int:
+        self._advance()
+        jid = next(self._ids)
+        if nbytes <= 0:
+            self.engine.schedule(0.0, on_done)
+            return jid
+        self.jobs[jid] = _DramJob(jid, float(nbytes), max(weight, 1e-6), on_done)
+        self._rearm()
+        return jid
+
+    def set_weight(self, job_id: int, weight: float) -> None:
+        if job_id in self.jobs:
+            self._advance()
+            self.jobs[job_id].weight = max(weight, 1e-6)
+            self._rearm()
+
+    @property
+    def active_jobs(self) -> int:
+        return len(self.jobs)
+
+    @property
+    def utilization(self) -> float:
+        return (self.bytes_served / self.total_bps) / self.engine.now if self.engine.now else 0.0
+
+
+class CorePool:
+    """NPU cores; tasks acquire ``n`` cores per inference, FIFO waiting."""
+
+    def __init__(self, engine: Engine, num_cores: int):
+        self.engine = engine
+        self.free = num_cores
+        self.num_cores = num_cores
+        self._waiters: List[Tuple[int, Callable[[], None]]] = []
+
+    def acquire(self, n: int, cb: Callable[[], None]) -> None:
+        if n > self.num_cores:
+            raise ValueError("request exceeds pool size")
+        if self.free >= n and not self._waiters:
+            self.free -= n
+            self.engine.schedule(0.0, cb)
+        else:
+            self._waiters.append((n, cb))
+
+    def release(self, n: int) -> None:
+        self.free += n
+        while self._waiters and self._waiters[0][0] <= self.free:
+            need, cb = self._waiters.pop(0)
+            self.free -= need
+            self.engine.schedule(0.0, cb)

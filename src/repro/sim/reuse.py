@@ -1,0 +1,92 @@
+"""Reuse-count / reuse-distance statistics (paper Fig. 3).
+
+Classifies every byte the benchmark DNNs move through the shared cache:
+
+* reuse count — how many *repeated* cache accesses a piece of data
+  receives after its first touch.  Weights stream through once per
+  inference (scratchpad-internal reuse is invisible to the LLC), so
+  they and single-consumer streams land in the 0-reuse bucket; an
+  intermediate written then read back has reuse count 1, residual /
+  multi-consumer tensors more.
+* reuse distance — bytes of *other* data accessed between producing an
+  intermediate and consuming it.  For layer-sequential execution this is
+  the remainder of the producer's output plus everything the consumer
+  touches before that input (its weights under multi-tenant interleaving
+  also the co-runners' traffic, which is why the paper measures it on
+  shared cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.core.types import LayerKind, ModelGraph
+
+DIST_BINS = ((0, 512 * 2**10), (512 * 2**10, 2**20), (2**20, 2 * 2**20),
+             (2 * 2**20, 1 << 62))
+DIST_LABELS = ("<0.5MB", "0.5-1MB", "1-2MB", ">2MB")
+
+
+@dataclasses.dataclass
+class ReuseStats:
+    reuse_count_bytes: Dict[str, int]     # "0", "1", "2+" -> bytes
+    distance_bytes: Dict[str, int]        # DIST_LABELS -> intermediate bytes
+
+    @property
+    def pct_no_reuse(self) -> float:
+        tot = sum(self.reuse_count_bytes.values())
+        return 100.0 * self.reuse_count_bytes["0"] / tot if tot else 0.0
+
+    def pct_distance_over(self, nbytes: int) -> float:
+        tot = sum(self.distance_bytes.values())
+        if not tot:
+            return 0.0
+        acc = 0
+        for (lo, hi), lab in zip(DIST_BINS, DIST_LABELS):
+            if lo >= nbytes:
+                acc += self.distance_bytes[lab]
+        return 100.0 * acc / tot
+
+
+def model_reuse_stats(graph: ModelGraph, co_runners: int = 1) -> ReuseStats:
+    counts = {"0": 0, "1": 0, "2+": 0}
+    dists = {lab: 0 for lab in DIST_LABELS}
+    layers = graph.layers
+    for i, l in enumerate(layers):
+        # weights: one pass per inference -> no cache-level reuse
+        counts["0"] += l.weight_bytes
+        # attention score tensors etc. (kind==ATTN zero-weight): produced
+        # and consumed inside the layer -> reuse 1, short distance
+        if l.kind == LayerKind.ATTN and l.weight_bytes == 0:
+            counts["1"] += min(l.input_bytes, l.output_bytes)
+        # inter-layer intermediate (this layer's output)
+        if i < len(layers) - 1:
+            nxt = layers[i + 1]
+            counts["1"] += l.output_bytes
+            # distance: consumer's weights + residual of own output,
+            # interleaved with co-runners' concurrent streams
+            own = l.output_bytes + nxt.weight_bytes
+            dist = own * max(1, co_runners)
+            for (lo, hi), lab in zip(DIST_BINS, DIST_LABELS):
+                if lo <= dist < hi:
+                    dists[lab] += l.output_bytes
+                    break
+        else:
+            counts["0"] += l.output_bytes  # final output leaves the chip
+        # model input
+        if i == 0:
+            counts["0"] += l.input_bytes
+    return ReuseStats(counts, dists)
+
+
+def aggregate_reuse_stats(graphs: List[ModelGraph], co_runners: int = 1
+                          ) -> ReuseStats:
+    counts = {"0": 0, "1": 0, "2+": 0}
+    dists = {lab: 0 for lab in DIST_LABELS}
+    for g in graphs:
+        s = model_reuse_stats(g, co_runners)
+        for k, v in s.reuse_count_bytes.items():
+            counts[k] += v
+        for k, v in s.distance_bytes.items():
+            dists[k] += v
+    return ReuseStats(counts, dists)

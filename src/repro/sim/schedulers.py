@@ -1,0 +1,186 @@
+"""Scheduler policies for the multi-tenant simulator.
+
+Five systems, mirroring paper Section IV-A3:
+
+  baseline   — transparent shared LLC, fair DRAM sharing (the Fig. 2
+               motivation system).
+  moca       — MoCA-like: transparent LLC + dynamic *bandwidth*
+               allocation driven by QoS slack (weights on the DRAM
+               processor-sharing pool).
+  aurora     — AuRORA-like: transparent LLC + bandwidth *and* NPU-core
+               co-allocation (lagging tasks may grab idle cores).
+  camdn_hw   — CaMDN(HW-only): NPU-controlled regions, equal static page
+               split, best-fit LWM/LBM inside the static quota, no
+               dynamic borrowing.
+  camdn      — CaMDN(Full): NPU-controlled regions + Algorithm 1 dynamic
+               allocation + LBM + timeouts (core/runtime.py).
+
+The transparent-LLC traffic model: each tenant's effective capacity is
+``usable_frac * total_cache / n_active`` (LRU fair split degraded by
+inter-tenant conflict/interleaving misses); a layer's DRAM traffic is
+the LWM mapper's traffic curve evaluated at that budget — i.e. the same
+analytic machinery prices both worlds, so CaMDN's edge comes only from
+(a) contention-free exclusive regions, (b) bypass/candidate mapping,
+(c) LBM zero-DRAM intermediates, (d) dynamic reallocation — exactly the
+paper's four mechanisms.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.mapping import MapperConfig, map_layer_lwm
+from repro.core.types import LayerSpec, ModelGraph
+
+# absolute budget grid for transparent-cache traffic curves (bytes)
+BUDGET_GRID = [0] + [2**i * 2**10 for i in range(8, 27)]  # 256KB .. 64MB
+
+
+@dataclasses.dataclass(frozen=True)
+class TransparentModelPlan:
+    """Per-layer traffic curves: dram_bytes at each BUDGET_GRID point,
+    plus stream (zero-cache) bytes used as the logical access count."""
+    name: str
+    curves: Tuple[Tuple[int, ...], ...]     # [layer][grid_idx] -> dram bytes
+    stream_bytes: Tuple[int, ...]
+    out_bytes: Tuple[int, ...]
+    in_bytes: Tuple[int, ...]
+    compute_s: Tuple[float, ...]            # per-core seconds
+
+
+_PLAN_CACHE: Dict[Tuple[str, int], TransparentModelPlan] = {}
+
+
+def transparent_plan(graph: ModelGraph, mcfg: Optional[MapperConfig] = None
+                     ) -> TransparentModelPlan:
+    mcfg = mcfg or MapperConfig()
+    key = (graph.name, id(type(mcfg)))
+    if key in _PLAN_CACHE:
+        return _PLAN_CACHE[key]
+    curves, stream, outs, ins, comp = [], [], [], [], []
+    for l in graph.layers:
+        row = []
+        for b in BUDGET_GRID:
+            row.append(map_layer_lwm(l, b, mcfg).dram_bytes)
+        curves.append(tuple(row))
+        stream.append(row[0])
+        outs.append(l.output_bytes)
+        ins.append(l.input_bytes)
+        comp.append(l.flops / mcfg.compute_flops)
+    plan = TransparentModelPlan(graph.name, tuple(curves), tuple(stream),
+                                tuple(outs), tuple(ins), tuple(comp))
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+@dataclasses.dataclass(frozen=True)
+class TransparentParams:
+    """Calibration of the transparent-LLC contention model.
+
+    Calibrated against the paper's own motivation numbers (Fig. 2):
+    hit rate −18.9…−59.7 % and memory access +32.7…+64.1 % going from 1
+    to 32 co-located DNNs; see benchmarks/fig2_contention.py."""
+    usable_frac: float = 0.09      # LRU can't perfectly partition; conflicts
+    capacity_alpha: float = 0.5    # eff capacity ~ cache/n_distinct^alpha
+    survive_frac: float = 0.3      # intermediate survives if it fits this share
+    interleave_penalty: float = 0.12  # extra misses per co-runner (saturating)
+    interleave_cap: float = 0.85
+    write_alloc_frac: float = 1.0  # LLC write-allocate: output fills cost reads
+
+
+def transparent_layer_dram(plan: TransparentModelPlan, i: int,
+                           cache_bytes: int, n_active: int,
+                           p: TransparentParams = TransparentParams()
+                           ) -> Tuple[int, int, int]:
+    """(dram_read, dram_write, access_bytes) for layer ``i`` of a model
+    under a transparent shared LLC with ``n_active`` co-located DISTINCT
+    models.  Instances of the same model share read-only weights in the
+    LLC, so pressure scales with distinct models; LRU competition splits
+    capacity sublinearly (hot lines survive) -> n^alpha."""
+    n = max(1, n_active)
+    eff = int(cache_bytes * p.usable_frac / (n ** p.capacity_alpha))
+    gi = bisect.bisect_right(BUDGET_GRID, eff) - 1
+    dram = plan.curves[i][gi]
+    # conflict/interleaving inflation on the *reusable* portion
+    compulsory = plan.curves[i][-1]
+    reload_part = max(0, dram - compulsory)
+    inflation = min(p.interleave_cap, p.interleave_penalty * (n - 1))
+    dram = dram + int(reload_part * inflation)
+    # inter-layer intermediate: previous output may still be resident
+    if i > 0 and plan.in_bytes[i] > 0 and plan.in_bytes[i] <= eff * p.survive_frac:
+        dram = max(compulsory - plan.in_bytes[i], dram - plan.in_bytes[i])
+    wr = plan.out_bytes[i]
+    # write-allocate: outputs that do not fit the effective share fill
+    # their lines from DRAM before being overwritten (CaMDN's
+    # bypass-write eliminates exactly this traffic).  At low occupancy
+    # write-validate/combining absorbs most fills; the cost ramps with
+    # co-location.
+    if plan.out_bytes[i] > eff * p.survive_frac:
+        wa = p.write_alloc_frac * min(1.0, (n - 1) / 8.0)
+        dram += int(plan.out_bytes[i] * wa)
+    rd = max(0, dram - wr)
+    return rd, wr, plan.stream_bytes[i]
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth / core allocation policies (MoCA / AuRORA style)
+# ---------------------------------------------------------------------------
+class BandwidthPolicy:
+    """DRAM processor-sharing weights from QoS slack."""
+
+    def __init__(self, kind: str):
+        assert kind in ("fair", "qos")
+        self.kind = kind
+
+    def weight(self, slack_ratio: float) -> float:
+        """slack_ratio = elapsed_fraction_of_budget; >1 means late."""
+        if self.kind == "fair":
+            return 1.0
+        # MoCA-style: late tasks get more bandwidth, early tasks throttle
+        return min(8.0, max(0.25, slack_ratio ** 2))
+
+
+class CorePolicy:
+    """AuRORA-style: lagging tasks may run on extra cores (up to 4)."""
+
+    def __init__(self, enabled: bool):
+        self.enabled = enabled
+
+    def cores_for(self, slack_ratio: float, free_cores: int) -> int:
+        if not self.enabled or free_cores <= 0:
+            return 1
+        if slack_ratio > 1.5 and free_cores >= 3:
+            return 4
+        if slack_ratio > 1.0 and free_cores >= 1:
+            return 2
+        return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerSpec:
+    name: str
+    camdn_cache: bool          # NPU-controlled regions (NEC/CPT) active
+    dynamic_alloc: bool        # Algorithm 1 (vs equal static split)
+    bandwidth: str             # "fair" | "qos"
+    core_scaling: bool
+    # Effective DRAM bandwidth fraction.  Transparent-LLC misses arrive
+    # as scattered line-granular requests with poor row-buffer locality;
+    # NEC-issued transfers (paper III-B2) are long sequential bursts the
+    # memory controller services near peak.  DRAMsim3-class effect,
+    # folded into a constant service-efficiency factor here.
+    dram_efficiency: float = 0.70
+
+
+SCHEDULERS: Dict[str, SchedulerSpec] = {
+    "baseline":  SchedulerSpec("baseline", False, False, "fair", False),
+    "moca":      SchedulerSpec("moca", False, False, "qos", False),
+    "aurora":    SchedulerSpec("aurora", False, False, "qos", True),
+    "camdn_hw":  SchedulerSpec("camdn_hw", True, False, "fair", False,
+                               dram_efficiency=0.89),
+    "camdn":     SchedulerSpec("camdn", True, True, "fair", False,
+                               dram_efficiency=0.92),
+    # QoS-experiment variant: CaMDN + AuRORA's bandwidth/NPU allocation
+    "camdn_qos": SchedulerSpec("camdn_qos", True, True, "qos", True,
+                               dram_efficiency=0.92),
+}

@@ -1,0 +1,128 @@
+"""Algorithm 1 semantics, line-by-line (paper III-D)."""
+import math
+
+import pytest
+
+from repro.core.allocator import AHEAD_FRACTION, DynamicCacheAllocator
+from repro.core.cache import CacheConfig, SharedCache
+from repro.core.mct import MCT, CacheMapEntry, MappingCandidate
+
+
+def cand(kind, pages, dram):
+    return MappingCandidate(kind=kind, p_need=pages, dram_bytes=dram,
+                            flops=1000, loops=(),
+                            cache_map=(CacheMapEntry("x", 0, pages),),
+                            usage_limit_bytes=pages * 32768)
+
+
+def make_mct(lwm_pages=(0, 8, 64), lbm_pages=96):
+    lwms = [cand("LWM", p, 10_000 - 50 * p) for p in lwm_pages]
+    lbm = cand("LBM", lbm_pages, 1_000) if lbm_pages else None
+    return MCT("layer", lwms, lbm)
+
+
+@pytest.fixture
+def alloc():
+    cache = SharedCache(CacheConfig())
+    a = DynamicCacheAllocator(cache)
+    for t in ("t0", "t1", "t2"):
+        a.register_task(t)
+    return cache, a
+
+
+# --- lines 1-6: predAvailPages --------------------------------------------
+def test_pred_avail_counts_idle_pages(alloc):
+    cache, a = alloc
+    assert a.pred_avail_pages(1.0, "t0") == cache.free_pages
+
+
+def test_pred_avail_adds_expected_releases(alloc):
+    cache, a = alloc
+    cache.alloc("t1", 100)
+    a.update_profile("t1", now=0.0, next_realloc_in=0.5, next_p_need=20,
+                     p_alloc=100)
+    # t1 reallocates at 0.5 < T_ahead=1.0 -> expect 100-20=80 pages back
+    assert a.pred_avail_pages(1.0, "t0") == cache.free_pages + 80
+    # T_ahead before t1's reallocation -> nothing extra
+    assert a.pred_avail_pages(0.4, "t0") == cache.free_pages
+
+
+def test_pred_avail_excludes_self(alloc):
+    cache, a = alloc
+    cache.alloc("t0", 50)
+    a.update_profile("t0", 0.0, 0.1, 0, 50)
+    assert a.pred_avail_pages(1.0, "t0") == cache.free_pages
+
+
+# --- lines 7-9: LBM already enabled ----------------------------------------
+def test_enabled_lbm_short_circuits(alloc):
+    cache, a = alloc
+    a.set_lbm("t0", True)
+    mct = make_mct()
+    sel = a.select("t0", mct, now=0.0, layer_t_est=1.0, block_t_est=5.0,
+                   is_head_of_block=False)
+    assert sel.candidate.kind == "LBM"
+    assert math.isinf(sel.t_ahead)          # line 9: infinity timeout
+    assert sel.p_cur == mct.lbm.p_need
+
+
+# --- lines 10-15: head of block LBM check -----------------------------------
+def test_head_of_block_enables_lbm_when_fits(alloc):
+    cache, a = alloc
+    mct = make_mct(lbm_pages=96)            # 384 free > 96
+    sel = a.select("t0", mct, now=0.0, layer_t_est=1.0, block_t_est=5.0,
+                   is_head_of_block=True)
+    assert sel.candidate.kind == "LBM"
+    assert sel.t_ahead == pytest.approx(0.0 + 5.0 * AHEAD_FRACTION)
+
+
+def test_head_of_block_falls_back_when_tight(alloc):
+    cache, a = alloc
+    cache.alloc("hog", 384 - 50)            # only 50 free, LBM needs 96
+    a.register_task("hog")
+    a.update_profile("hog", 0.0, next_realloc_in=100.0, next_p_need=334,
+                     p_alloc=334)           # won't release within T_ahead
+    mct = make_mct(lbm_pages=96)
+    sel = a.select("t0", mct, now=0.0, layer_t_est=1.0, block_t_est=5.0,
+                   is_head_of_block=True)
+    assert sel.candidate.kind == "LWM"
+    assert sel.candidate.p_need <= 50
+
+
+# --- lines 16-22: best-fit LWM ------------------------------------------------
+def test_lwm_best_fit_largest_fitting(alloc):
+    cache, a = alloc
+    cache.alloc("hog", 384 - 10)
+    a.register_task("hog")
+    a.update_profile("hog", 0.0, 100.0, 374, 374)
+    mct = make_mct(lwm_pages=(0, 8, 64), lbm_pages=None)
+    sel = a.select("t0", mct, 0.0, 1.0, 5.0, is_head_of_block=False)
+    assert sel.candidate.p_need == 8        # largest <= 10 available
+    assert sel.t_ahead == pytest.approx(1.0 * AHEAD_FRACTION)
+
+
+def test_lwm_timeout_computed_from_layer_t_est(alloc):
+    cache, a = alloc
+    mct = make_mct(lbm_pages=None)
+    sel = a.select("t0", mct, now=2.0, layer_t_est=0.5, block_t_est=5.0,
+                   is_head_of_block=False)
+    assert sel.t_ahead == pytest.approx(2.0 + 0.5 * AHEAD_FRACTION)
+
+
+# --- timeout downgrades ---------------------------------------------------
+def test_timeout_downgrade_lwm(alloc):
+    cache, a = alloc
+    mct = make_mct(lwm_pages=(0, 8, 64), lbm_pages=None)
+    top = mct.lwms[-1]
+    down = a.on_timeout_downgrade(mct, top)
+    assert down.p_need == 8
+    down2 = a.on_timeout_downgrade(mct, down)
+    assert down2.p_need == 0
+
+
+def test_timeout_downgrade_from_lbm(alloc):
+    cache, a = alloc
+    mct = make_mct(lwm_pages=(0, 8, 64), lbm_pages=96)
+    down = a.on_timeout_downgrade(mct, mct.lbm)
+    assert down.kind == "LWM"
+    assert down.p_need < mct.lbm.p_need

@@ -1,0 +1,203 @@
+"""Unit + property tests: shared cache, CPT, NEC (paper III-B)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import CacheConfig, SharedCache
+from repro.core.cpt import CachePageTable, CptFault
+from repro.core.nec import Nec, NecError
+
+
+def make_cache(**kw):
+    return SharedCache(CacheConfig(**kw))
+
+
+# ------------------------------------------------------------- config --
+def test_paper_configuration():
+    c = CacheConfig()  # Table II defaults
+    assert c.total_bytes == 16 * 2**20
+    assert c.num_slices == 8
+    assert c.npu_bytes == 12 * 2**20        # 12 of 16 ways
+    assert c.num_pages == 384               # 12MB / 32KB
+    assert c.lines_per_page == 512
+    # CPT: <=512 entries x 3B (paper: 1.5KB SRAM)
+    cpt = CachePageTable(c)
+    assert cpt.sram_bytes <= 512 * 3
+
+
+def test_way_mask_partition():
+    cache = make_cache()
+    cpu_ways = cache.config.num_ways - cache.config.npu_ways
+    for m in cache.way_mask:
+        assert m & ((1 << cpu_ways) - 1) == 0          # CPU ways excluded
+        assert bin(m).count("1") == cache.config.npu_ways
+
+
+# --------------------------------------------------------- page pool --
+def test_alloc_free_roundtrip():
+    cache = make_cache()
+    pages = cache.alloc("a", 10)
+    assert pages is not None and len(pages) == 10
+    assert cache.allocated_pages("a") == 10
+    assert cache.free_pages == 374
+    assert cache.free("a") == 10
+    assert cache.free_pages == 384
+
+
+def test_alloc_insufficient_returns_none():
+    cache = make_cache()
+    assert cache.alloc("a", 385) is None
+    assert cache.free_pages == 384  # nothing leaked
+
+
+def test_cannot_free_unowned():
+    cache = make_cache()
+    a = cache.alloc("a", 2)
+    cache.alloc("b", 2)
+    with pytest.raises(KeyError):
+        cache.free("b", a)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["t0", "t1", "t2", "t3"]),
+                          st.integers(0, 100)), max_size=40))
+def test_page_exclusivity_property(ops):
+    """No page is ever owned by two tenants; free count conserved."""
+    cache = make_cache()
+    total = cache.config.num_pages
+    held = {}
+    for tenant, n in ops:
+        got = cache.alloc(tenant, n)
+        if got is not None:
+            held.setdefault(tenant, []).extend(got)
+        # invariants
+        owned = [p for ps in held.values() for p in ps]
+        assert len(owned) == len(set(owned)), "page double-owned"
+        assert cache.free_pages + len(owned) == total
+        for t, ps in held.items():
+            for p in ps:
+                assert cache.owner_of(p) == t
+    for t in list(held):
+        cache.free(t)
+    assert cache.free_pages == total
+
+
+# ---------------------------------------------------------------- CPT --
+def test_cpt_translate():
+    c = CacheConfig()
+    cpt = CachePageTable(c)
+    cpt.map(0, 42)
+    assert cpt.translate(0) == 42 * c.page_bytes
+    assert cpt.translate(100) == 42 * c.page_bytes + 100
+    with pytest.raises(CptFault):
+        cpt.translate(c.page_bytes)  # vcpn 1 unmapped
+
+
+def test_cpt_bounds():
+    c = CacheConfig()
+    cpt = CachePageTable(c)
+    with pytest.raises(ValueError):
+        cpt.map(c.num_pages, 0)
+    with pytest.raises(ValueError):
+        cpt.map(0, c.num_pages)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 383), st.integers(0, 383),
+       st.integers(0, 32 * 2**10 - 1))
+def test_cpt_translation_property(vcpn, pcpn, offset):
+    c = CacheConfig()
+    cpt = CachePageTable(c)
+    cpt.map(vcpn, pcpn)
+    pc = cpt.translate(vcpn * c.page_bytes + offset)
+    assert pc == pcpn * c.page_bytes + offset
+    # pcaddr always lands inside the NPU subspace
+    cache = SharedCache(c)
+    assert cache.check_way_partition(pc)
+
+
+def test_pcaddr_decompose_slice_striping():
+    """Consecutive lines stripe across slices (Fig 5b)."""
+    cache = make_cache()
+    c = cache.config
+    slices = [cache.decompose(i * c.line_bytes).slice_index
+              for i in range(c.num_slices * 2)]
+    assert slices == list(range(c.num_slices)) * 2
+
+
+# ---------------------------------------------------------------- NEC --
+def _tenant_setup():
+    cache = make_cache()
+    nec = Nec(cache)
+    cpt = CachePageTable(cache.config)
+    pages = cache.alloc("t", 4)
+    cpt.map_pages(pages)
+    return cache, nec, cpt
+
+
+def test_nec_fill_then_read_hits():
+    cache, nec, cpt = _tenant_setup()
+    nec.fill("t", cpt, 0, 4096)
+    assert nec.traffic.dram_read == 4096
+    missed = nec.read("t", cpt, 0, 4096)
+    assert missed == 0
+    assert nec.traffic.hit_rate == 1.0
+
+
+def test_nec_read_miss_fills():
+    cache, nec, cpt = _tenant_setup()
+    missed = nec.read("t", cpt, 0, 1024)
+    assert missed == 1024
+    assert nec.read("t", cpt, 0, 1024) == 0  # now resident
+
+
+def test_nec_write_then_writeback():
+    cache, nec, cpt = _tenant_setup()
+    nec.write("t", cpt, 0, 2048)
+    assert nec.traffic.dram_total == 0      # dirty in cache only
+    nec.writeback("t", cpt, 0, 2048)
+    assert nec.traffic.dram_write == 2048
+
+
+def test_nec_bypass_no_residency():
+    cache, nec, cpt = _tenant_setup()
+    nec.bypass_read("t", 4096)
+    assert nec.traffic.dram_read == 4096
+    assert nec.resident_lines("t") == 0     # bypass never occupies cache
+    nec.bypass_write("t", 4096)
+    assert nec.traffic.dram_write == 4096
+
+
+def test_nec_multicast_single_fetch():
+    cache, nec, cpt = _tenant_setup()
+    nec.fill("t", cpt, 0, 4096)
+    r0 = nec.traffic.dram_read
+    nec.multicast_read("t", cpt, 0, 4096, group_size=4)
+    assert nec.traffic.dram_read == r0       # one cache copy serves 4 NPUs
+    assert nec.traffic.noc >= 4 * 4096
+
+
+def test_nec_multicast_bypass_one_dram_access():
+    cache, nec, cpt = _tenant_setup()
+    nec.multicast_bypass_read("t", 8192, group_size=8)
+    assert nec.traffic.dram_read == 8192     # NOT 8 * 8192
+    assert nec.traffic.noc == 8 * 8192
+
+
+def test_nec_unmapped_access_faults():
+    cache, nec, cpt = _tenant_setup()
+    from repro.core.cpt import CptFault
+    with pytest.raises(CptFault):
+        nec.read("t", cpt, 5 * 32 * 2**10, 64)  # vcpn 5 unmapped
+
+
+def test_nec_isolation_between_tenants():
+    """A tenant's fills never appear resident to another tenant."""
+    cache = make_cache()
+    nec = Nec(cache)
+    cpt_a, cpt_b = CachePageTable(cache.config), CachePageTable(cache.config)
+    cpt_a.map_pages(cache.alloc("a", 2))
+    cpt_b.map_pages(cache.alloc("b", 2))
+    nec.fill("a", cpt_a, 0, 4096)
+    assert nec.resident_lines("b") == 0
+    missed = nec.read("b", cpt_b, 0, 4096)
+    assert missed == 4096                     # b must fetch its own copy

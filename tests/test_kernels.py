@@ -1,0 +1,140 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.block_fused_ffn import block_fused_ffn
+from repro.kernels.cache_matmul import cache_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_chunk
+from repro.core.vmem import TileConfig, tile_vmem_bytes
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------- matmul --
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 512, 384),
+                                   (512, 128, 1024), (64, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cache_matmul_shapes(m, n, k, dtype):
+    a = jax.random.normal(KEY, (m, k), dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), dtype)
+    bm, bn, bk = min(128, m), min(128, n), min(128, k)
+    tile = TileConfig(bm, bn, bk, tile_vmem_bytes(bm, bn, bk, a.dtype.itemsize))
+    out = cache_matmul(a, b, tile)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref.matmul_ref(a, b), np.float32),
+        **tol(dtype))
+
+
+@pytest.mark.parametrize("pages", [2, 16, 256])
+def test_budgeted_matmul_padding_and_budgets(pages):
+    a = jax.random.normal(KEY, (100, 200), jnp.float32)
+    b = jax.random.normal(KEY, (200, 60), jnp.float32)
+    out = ops.budgeted_matmul(a, b, pages=pages)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.matmul_ref(a, b)),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_budget_monotone_tiles():
+    """Larger budgets never select smaller tiles (candidate ordering)."""
+    from repro.core.vmem import candidates_for_matmul, select_tile
+    cands = candidates_for_matmul(1024, 1024, 1024, 2)
+    prev = 0
+    for pages in (2, 8, 32, 128, 512):
+        t = select_tile(cands, pages)
+        assert t.pages <= max(pages, min(c.pages for c in cands))
+        area = t.bm * t.bn * t.bk
+        assert area >= prev
+        prev = area
+
+
+# ---------------------------------------------------------- attention --
+@pytest.mark.parametrize("S,H,Hkv,hd", [(64, 4, 4, 32), (128, 8, 2, 64),
+                                        (96, 6, 3, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_gqa(S, H, Hkv, hd, causal):
+    B = 2
+    q = jax.random.normal(KEY, (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hkv, S, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, Hkv, S, hd))
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_kv=32)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    B, H, S, hd = 1, 2, 64, 32
+    q = jax.random.normal(KEY, (B, H, S, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, H, S, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, H, S, hd), jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=32, block_kv=32)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ----------------------------------------------------------- fused ffn --
+@pytest.mark.parametrize("S,d,f,bs,bf", [(64, 32, 128, 32, 64),
+                                         (256, 64, 256, 64, 128),
+                                         (128, 128, 512, 128, 512)])
+def test_block_fused_ffn(S, d, f, bs, bf):
+    x = jax.random.normal(KEY, (S, d), jnp.float32)
+    wg = jax.random.normal(jax.random.fold_in(KEY, 4), (d, f)) * 0.2
+    wu = jax.random.normal(jax.random.fold_in(KEY, 5), (d, f)) * 0.2
+    wd = jax.random.normal(jax.random.fold_in(KEY, 6), (f, d)) * 0.2
+    out = block_fused_ffn(x, wg, wu, wd, block_s=bs, block_f=bf)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.ffn_ref(x, wg, wu, wd)),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ----------------------------------------------------------------- ssd --
+@pytest.mark.parametrize("S,P,N,chunk", [(64, 16, 8, 16), (128, 32, 16, 32),
+                                         (64, 64, 128, 64)])
+def test_ssd_chunk(S, P, N, chunk):
+    BH = 4
+    x = jax.random.normal(KEY, (BH, S, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 7), (BH, S)))
+    A = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 8), (BH,))) + 0.1
+    B = jax.random.normal(jax.random.fold_in(KEY, 9), (BH, S, N))
+    C = jax.random.normal(jax.random.fold_in(KEY, 10), (BH, S, N))
+    y, st = ssd_chunk(x, dt, A, B, C, chunk)
+    yr, sr = ref.ssd_chunk_ref(x, dt, A, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_kernel_matches_model_ssd():
+    """The Pallas intra-chunk output equals models.ssm.ssd's y_diag+states
+    composition when the initial state is zero and decays combine."""
+    from repro.models.ssm import ssd
+    BH, S, P, N, chunk = 2, 64, 16, 8, 16
+    b, h = 1, BH
+    x = jax.random.normal(KEY, (b, S, h, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 11), (b, S, h)))
+    A = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 12), (h,))) + 0.1
+    B = jax.random.normal(jax.random.fold_in(KEY, 13), (b, S, N))
+    C = jax.random.normal(jax.random.fold_in(KEY, 14), (b, S, N))
+    D = jnp.zeros((h,))
+    y_full, _ = ssd(x, dt, A, B, C, D, chunk)
+    # kernel path: per (b*h) layout
+    xk = jnp.moveaxis(x, 2, 1).reshape(BH, S, P)
+    dtk = jnp.moveaxis(dt, 2, 1).reshape(BH, S)
+    Bk = jnp.broadcast_to(B[:, None], (b, h, S, N)).reshape(BH, S, N)
+    Ck = jnp.broadcast_to(C[:, None], (b, h, S, N)).reshape(BH, S, N)
+    y_diag, states = ssd_chunk(xk, dtk, A, Bk, Ck, chunk)
+    # first chunk has no inter-chunk contribution: must match exactly
+    yk = y_diag.reshape(b, h, S, P)[:, :, :chunk]
+    yf = jnp.moveaxis(y_full, 2, 1)[:, :, :chunk]
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yf, np.float32),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,139 @@
+"""Mapper + MCT + LBM tests (paper III-C)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lbm import LbmConfig, build_model_mapping, segment_blocks
+from repro.core.mapping import MapperConfig, build_mct, map_layer_lwm
+from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph
+
+
+def fc(name, m, k, n, eb=1):
+    return LayerSpec(name, LayerKind.GEMM, (GemmDims(m, n, k),),
+                     input_bytes=m * k * eb, output_bytes=m * n * eb,
+                     weight_bytes=k * n * eb, elem_bytes=eb)
+
+
+CFG = MapperConfig()
+
+
+def test_traffic_monotone_in_budget():
+    """More cache never costs more DRAM."""
+    layer = fc("l", 512, 1024, 2048)
+    prev = None
+    for frac in (0.0, 0.125, 0.25, 0.5, 1.0):
+        budget = int(frac * CFG.npu_subspace_bytes)
+        m = map_layer_lwm(layer, budget, CFG)
+        if prev is not None:
+            assert m.dram_bytes <= prev
+        prev = m.dram_bytes
+
+
+def test_candidate_fits_budget():
+    layer = fc("l", 512, 1024, 2048)
+    for budget in CFG.usage_limits:
+        m = map_layer_lwm(layer, budget, CFG)
+        assert m.p_need * CFG.page_bytes <= max(budget + CFG.page_bytes,
+                                                CFG.page_bytes)
+
+
+def test_zero_budget_streams():
+    m = map_layer_lwm(fc("l", 256, 256, 256), 0, CFG)
+    assert m.p_need == 0
+    assert any(e.bypass for e in m.cache_map)
+
+
+def test_full_budget_reaches_compulsory():
+    layer = fc("l", 512, 1024, 2048)
+    m = map_layer_lwm(layer, CFG.npu_subspace_bytes, CFG)
+    assert m.dram_bytes == layer.compulsory_dram_bytes
+
+
+def test_weight_reuse_lstm():
+    """B-resident mapping loads reused weights once across reps."""
+    lstm = LayerSpec("lstm", LayerKind.LSTM,
+                     (GemmDims(M=1, N=4096, K=2048, reps=32, b_reused=True),),
+                     input_bytes=32 * 1024, output_bytes=32 * 1024,
+                     weight_bytes=2048 * 4096)
+    stream = map_layer_lwm(lstm, 0, CFG)
+    cached = map_layer_lwm(lstm, CFG.npu_subspace_bytes, CFG)
+    assert cached.dram_bytes < stream.dram_bytes / 4  # >=4x traffic cut
+
+
+def test_mct_sorted_and_dominance_pruned():
+    mct = build_mct(fc("l", 1024, 1024, 4096), CFG)
+    needs = [m.p_need for m in mct.lwms]
+    drams = [m.dram_bytes for m in mct.lwms]
+    assert needs == sorted(needs)
+    assert drams == sorted(drams, reverse=True)  # more pages -> less DRAM
+
+
+def test_mct_best_fit_semantics():
+    mct = build_mct(fc("l", 1024, 1024, 4096), CFG)
+    big = mct.best_fit(10**6)
+    assert big.p_need == max(m.p_need for m in mct.lwms)
+    small = mct.best_fit(0)
+    assert small.p_need == mct.min_pages
+    # Algorithm-1 loop form: result always fits
+    for avail in (0, 1, 8, 64, 384):
+        assert mct.best_fit(avail).p_need <= max(avail, mct.min_pages)
+
+
+def test_mct_next_smaller():
+    mct = build_mct(fc("l", 1024, 1024, 4096), CFG)
+    if len(mct.lwms) > 1:
+        top = mct.lwms[-1]
+        down = mct.next_smaller(top)
+        assert down.p_need < top.p_need
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(64, 2048), st.integers(64, 2048), st.integers(64, 2048))
+def test_lwm_property_traffic_bounds(m, k, n):
+    """compulsory <= mapped traffic <= stream traffic, all budgets."""
+    layer = fc("l", m, k, n)
+    stream = map_layer_lwm(layer, 0, CFG).dram_bytes
+    for budget in (0, 2**20, CFG.npu_subspace_bytes):
+        d = map_layer_lwm(layer, budget, CFG).dram_bytes
+        assert layer.compulsory_dram_bytes <= d <= stream
+
+
+# ------------------------------------------------------------- blocks --
+def graph3():
+    return ModelGraph("g", [fc("a", 256, 512, 512), fc("b", 256, 512, 512),
+                            fc("c", 256, 512, 2048)])
+
+
+def test_blocks_cover_model():
+    mm = build_model_mapping(graph3())
+    covered = sorted(i for s, e in mm.blocks for i in range(s, e))
+    assert covered == list(range(3))
+    for i in range(3):
+        blk = mm.block_of(i)
+        assert blk[0] <= i < blk[1]
+
+
+def test_lbm_beats_lwm_within_block():
+    mm = build_model_mapping(graph3())
+    lbm_total = sum(m.lbm.dram_bytes for m in mm.mcts if m.lbm)
+    lwm_total = sum(m.lwms[-1].dram_bytes for m in mm.mcts)
+    assert lbm_total < lwm_total
+
+
+def test_block_page_cap_respected():
+    lcfg = LbmConfig(page_cap=16)
+    layers = [fc(f"l{i}", 1024, 1024, 1024) for i in range(8)]
+    blocks = segment_blocks(ModelGraph("g", layers), CFG, lcfg)
+    from repro.core.lbm import _block_lbm_plan
+    for s, e in blocks:
+        if e - s >= lcfg.min_layers:
+            pages, _ = _block_lbm_plan(layers[s:e], CFG, lcfg.page_cap)
+            assert pages <= lcfg.page_cap
+
+
+def test_single_layer_block_has_no_lbm():
+    # huge layers force single-layer blocks
+    layers = [fc(f"l{i}", 8192, 4096, 4096) for i in range(3)]
+    mm = build_model_mapping(ModelGraph("g", layers),
+                             lcfg=LbmConfig(page_cap=4))
+    for mct in mm.mcts:
+        assert mct.lbm is None

@@ -1,0 +1,147 @@
+"""Property tests: VMEM tile bridge (core/vmem) and the multi-tenant
+runtime state machine (core/runtime) under adversarial schedules."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CacheConfig, DynamicCacheAllocator, GemmDims,
+                        LayerKind, LayerSpec, ModelGraph, Nec, SharedCache,
+                        TenantModel, TenantTask)
+from repro.core.vmem import (PAGE_BYTES, TileConfig, candidates_for_matmul,
+                             fused_ffn_admissible, select_tile,
+                             tile_vmem_bytes)
+
+
+# ------------------------------------------------------------- vmem --
+@settings(max_examples=80, deadline=None)
+@given(st.integers(64, 8192), st.integers(64, 8192), st.integers(64, 8192),
+       st.sampled_from([1, 2, 4]))
+def test_candidates_hardware_aligned(m, n, k, eb):
+    cands = candidates_for_matmul(m, n, k, eb)
+    assert cands, "at least one candidate"
+    for c in cands:
+        assert c.bm % 128 == 0 and c.bn % 128 == 0 and c.bk % 128 == 0
+        assert c.vmem_bytes == tile_vmem_bytes(c.bm, c.bn, c.bk, eb)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(1, 3000))
+def test_select_tile_fits_budget(pages):
+    cands = candidates_for_matmul(2048, 2048, 2048, 2)
+    t = select_tile(cands, pages)
+    min_pages = min(c.pages for c in cands)
+    assert t.pages <= max(pages, min_pages)
+
+
+def test_fused_ffn_admissibility_monotone():
+    """More pages never makes LBM inadmissible."""
+    prev = False
+    for pages in (1, 4, 16, 64, 256, 1024, 4096):
+        ok = fused_ffn_admissible(256, 1024, 4096, 2, pages)
+        assert ok or not prev or True  # monotone non-decreasing
+        if prev:
+            assert ok, "admissibility regressed with more pages"
+        prev = prev or ok
+    assert prev, "never admissible even with 4096 pages"
+
+
+# ----------------------------------------------------------- runtime --
+def _model(nlayers=4, m=256, k=512, n=512):
+    layers = [LayerSpec(f"l{i}", LayerKind.GEMM,
+                        (GemmDims(m, n, k),),
+                        input_bytes=m * k, output_bytes=m * n,
+                        weight_bytes=k * n) for i in range(nlayers)]
+    return TenantModel(ModelGraph("m", layers))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2), min_size=4, max_size=40),
+       st.integers(2, 6))
+def test_runtime_interleaving_invariants(schedule, n_tasks):
+    """Arbitrary task interleavings preserve: page conservation, page
+    exclusivity, monotone layer progress, eventual completion."""
+    cache = SharedCache(CacheConfig())
+    nec = Nec(cache)
+    alloc = DynamicCacheAllocator(cache)
+    tm = _model()
+    tasks = [TenantTask(f"t{i}", tm, cache, nec, alloc, )
+             for i in range(n_tasks)]
+    now = 0.0
+    total = cache.config.num_pages
+    for pick in schedule + list(range(3)) * (4 * n_tasks):
+        t = tasks[pick % n_tasks]
+        if t.done:
+            continue
+        t.begin_layer(now)
+        need = t.pages_to_request()
+        granted = cache.alloc(t.id, need) if need else []
+        attempts = 0
+        while granted is None and attempts < 6:
+            t.on_timeout(now)
+            granted = cache.alloc(t.id, t.pages_to_request())
+            attempts += 1
+        if granted is None:
+            continue  # starved this round; try later
+        plan = t.start_execution(now, granted)
+        now += max(plan.compute_s, 1e-7)
+        t.end_layer(now)
+        held = sum(cache.allocated_pages(x.id) for x in tasks)
+        assert cache.free_pages + held == total
+    # drive everyone to completion
+    for _ in range(100):
+        for t in tasks:
+            if t.done:
+                continue
+            t.begin_layer(now)
+            granted = cache.alloc(t.id, t.pages_to_request())
+            while granted is None:
+                t.on_timeout(now)
+                granted = cache.alloc(t.id, t.pages_to_request())
+            plan = t.start_execution(now, granted)
+            now += max(plan.compute_s, 1e-7)
+            t.end_layer(now)
+    assert all(t.done for t in tasks)
+    held = sum(cache.allocated_pages(t.id) for t in tasks)
+    assert cache.free_pages + held == total
+
+
+def test_lbm_pages_persist_to_block_tail():
+    cache = SharedCache(CacheConfig())
+    nec = Nec(cache)
+    alloc = DynamicCacheAllocator(cache)
+    tm = _model(nlayers=3)
+    assert tm.mapping.blocks == [(0, 3)], tm.mapping.blocks
+    t = TenantTask("t", tm, cache, nec, alloc)
+    now = 0.0
+    sel = t.begin_layer(now)
+    assert sel.candidate.kind == "LBM"  # plenty of free pages
+    granted = cache.alloc("t", t.pages_to_request())
+    t.start_execution(now, granted)
+    t.end_layer(now)
+    assert cache.allocated_pages("t") > 0  # still held mid-block
+    for _ in range(2):
+        t.begin_layer(now)
+        g = cache.alloc("t", t.pages_to_request()) or []
+        t.start_execution(now, g)
+        t.end_layer(now)
+    assert t.done
+    assert cache.allocated_pages("t") == 0  # released at block tail
+
+
+def test_downgrade_chain_reaches_zero_pages():
+    cache = SharedCache(CacheConfig())
+    nec = Nec(cache)
+    alloc = DynamicCacheAllocator(cache)
+    tm = _model()
+    hog_pages = cache.alloc("hog", cache.config.num_pages)
+    assert hog_pages is not None
+    t = TenantTask("t", tm, cache, nec, alloc)
+    sel = t.begin_layer(0.0)
+    for _ in range(8):
+        if t.pages_to_request() == 0:
+            break
+        sel = t.on_timeout(0.0)
+    assert t.pages_to_request() == 0, "downgrade chain must hit STREAM"
+    plan = t.start_execution(0.0, [])
+    assert plan.dram_read_bytes > 0
