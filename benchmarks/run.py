@@ -9,11 +9,11 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (fig2_contention, fig3_reuse, fig7_speedup,
-                            fig8_scaling, fig9_qos, table3_area)
+    from benchmarks import (arrival_sweep, fig2_contention, fig3_reuse,
+                            fig7_speedup, fig8_scaling, fig9_qos, table3_area)
     print("name,us_per_call,derived")
     for mod in (fig3_reuse, table3_area, fig2_contention, fig7_speedup,
-                fig8_scaling, fig9_qos):
+                fig8_scaling, fig9_qos, arrival_sweep):
         mod.main()
     # roofline summary (requires prior `python -m repro.launch.dryrun`)
     try:

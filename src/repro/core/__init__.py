@@ -8,8 +8,10 @@ from repro.core.lbm import LbmConfig, build_model_mapping, segment_blocks
 from repro.core.mapping import MapperConfig, build_mct, map_layer_lwm
 from repro.core.mct import (MCT, CacheMapEntry, LoopTable, MappingCandidate,
                             ModelMapping, Residency)
-from repro.core.nec import Nec, NecError, Traffic
-from repro.core.runtime import ExecutionPlan, TenantModel, TenantTask
+from repro.core.nec import Nec, NecError, Traffic, TrafficLedger
+from repro.core.policy import (CachePolicy, CamdnPolicy, ExecutionPlan,
+                               StaticQuotaPolicy)
+from repro.core.runtime import TenantModel, TenantTask
 from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph
 
 __all__ = [
@@ -19,5 +21,6 @@ __all__ = [
     "MappingCandidate", "ModelMapping", "LoopTable", "CacheMapEntry",
     "Residency", "DynamicCacheAllocator", "Selection", "TaskProfile",
     "ExecutionPlan", "TenantModel", "TenantTask", "GemmDims", "LayerKind",
-    "LayerSpec", "ModelGraph",
+    "LayerSpec", "ModelGraph", "TrafficLedger", "CachePolicy", "CamdnPolicy",
+    "StaticQuotaPolicy",
 ]

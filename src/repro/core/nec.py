@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Set, Tuple
 
-from repro.core.cache import CacheConfig, SharedCache
+from repro.core.cache import SharedCache
 from repro.core.cpt import CachePageTable, CptFault
 
 
@@ -54,6 +54,48 @@ class NecError(Exception):
     pass
 
 
+class TrafficLedger:
+    """Single point of traffic accounting: a global :class:`Traffic`
+    total plus a per-tenant breakdown, mutated only through
+    :meth:`charge`.  Counters are monotone by construction — negative
+    deltas raise — so every consumer (NEC semantics, the unified
+    runtime, the transparent-LLC pricing path) shares one set of
+    invariants and the CaMDN/baseline comparisons stay apples-to-apples.
+    """
+
+    def __init__(self):
+        self.total = Traffic()
+        self.per_tenant: Dict[str, Traffic] = {}
+
+    def tenant(self, tenant: str) -> Traffic:
+        t = self.per_tenant.get(tenant)
+        if t is None:
+            t = self.per_tenant[tenant] = Traffic()
+        return t
+
+    def charge(self, tenant: str, *, dram_read: int = 0, dram_write: int = 0,
+               cache_read: int = 0, cache_write: int = 0, noc: int = 0,
+               hits: int = 0, accesses: int = 0) -> None:
+        deltas = (dram_read, dram_write, cache_read, cache_write,
+                  noc, hits, accesses)
+        if any(d < 0 for d in deltas):
+            raise NecError(f"negative traffic delta for {tenant}: {deltas}")
+        for t in (self.total, self.tenant(tenant)):
+            t.dram_read += dram_read
+            t.dram_write += dram_write
+            t.cache_read += cache_read
+            t.cache_write += cache_write
+            t.noc += noc
+            t.hits += hits
+            t.accesses += accesses
+
+    def drop_tenant(self, tenant: str) -> Traffic:
+        """Retire a tenant's breakdown entry (totals keep its history);
+        returns the retired counters so a departing tenant's stats can be
+        folded into its final result."""
+        return self.per_tenant.pop(tenant, Traffic())
+
+
 class Nec:
     """Line-granular NPU-controlled access over a tenant's CPT window.
 
@@ -64,19 +106,21 @@ class Nec:
     evict each other* (the property the paper's architecture buys).
     """
 
-    def __init__(self, cache: SharedCache):
+    def __init__(self, cache: SharedCache, ledger: Optional[TrafficLedger] = None):
         self.cache = cache
         self.config = cache.config
-        self.traffic = Traffic()
-        self.per_tenant: Dict[str, Traffic] = {}
+        self.ledger = ledger if ledger is not None else TrafficLedger()
         # resident line set: (tenant, line_vcaddr)
         self._resident: Dict[str, Set[int]] = {}
 
-    # -- helpers -------------------------------------------------------
-    def _t(self, tenant: str) -> Traffic:
-        if tenant not in self.per_tenant:
-            self.per_tenant[tenant] = Traffic()
-        return self.per_tenant[tenant]
+    # -- ledger views ---------------------------------------------------
+    @property
+    def traffic(self) -> Traffic:
+        return self.ledger.total
+
+    @property
+    def per_tenant(self) -> Dict[str, Traffic]:
+        return self.ledger.per_tenant
 
     def _line(self, vcaddr: int) -> int:
         return vcaddr & ~(self.config.line_bytes - 1)
@@ -112,9 +156,7 @@ class Nec:
             self._check_mapped(cpt, line)
             if line not in res:
                 res.add(line)
-                for t in (self.traffic, self._t(tenant)):
-                    t.dram_read += lb
-                    t.cache_write += lb
+                self.ledger.charge(tenant, dram_read=lb, cache_write=lb)
 
     def writeback(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int) -> None:
         """cache -> memory."""
@@ -123,9 +165,7 @@ class Nec:
         for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
             self._check_mapped(cpt, line)
             if line in res:
-                for t in (self.traffic, self._t(tenant)):
-                    t.cache_read += lb
-                    t.dram_write += lb
+                self.ledger.charge(tenant, cache_read=lb, dram_write=lb)
 
     def read(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int,
              fill_on_miss: bool = True) -> int:
@@ -135,26 +175,17 @@ class Nec:
         missed = 0
         for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
             self._check_mapped(cpt, line)
-            for t in (self.traffic, self._t(tenant)):
-                t.accesses += 1
             if line in res:
-                for t in (self.traffic, self._t(tenant)):
-                    t.hits += 1
-                    t.cache_read += lb
-                    t.noc += lb
+                self.ledger.charge(tenant, accesses=1, hits=1,
+                                   cache_read=lb, noc=lb)
             else:
                 missed += lb
                 if fill_on_miss:
                     res.add(line)
-                    for t in (self.traffic, self._t(tenant)):
-                        t.dram_read += lb
-                        t.cache_write += lb
-                        t.cache_read += lb
-                        t.noc += lb
+                    self.ledger.charge(tenant, accesses=1, dram_read=lb,
+                                       cache_write=lb, cache_read=lb, noc=lb)
                 else:
-                    for t in (self.traffic, self._t(tenant)):
-                        t.dram_read += lb
-                        t.noc += lb
+                    self.ledger.charge(tenant, accesses=1, dram_read=lb, noc=lb)
         return missed
 
     def write(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int) -> None:
@@ -164,25 +195,19 @@ class Nec:
         for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
             self._check_mapped(cpt, line)
             res.add(line)
-            for t in (self.traffic, self._t(tenant)):
-                t.accesses += 1
-                t.hits += 1  # NPU-controlled writes never miss
-                t.noc += lb
-                t.cache_write += lb
+            # NPU-controlled writes never miss
+            self.ledger.charge(tenant, accesses=1, hits=1, noc=lb,
+                               cache_write=lb)
 
     # -- advanced semantics ------------------------------------------------
     def bypass_read(self, tenant: str, nbytes: int) -> None:
         """memory -> NPU directly; zero cache footprint (non-reusable data)."""
-        for t in (self.traffic, self._t(tenant)):
-            t.accesses += (nbytes + self.config.line_bytes - 1) // self.config.line_bytes
-            t.dram_read += nbytes
-            t.noc += nbytes
+        lines = (nbytes + self.config.line_bytes - 1) // self.config.line_bytes
+        self.ledger.charge(tenant, accesses=lines, dram_read=nbytes, noc=nbytes)
 
     def bypass_write(self, tenant: str, nbytes: int) -> None:
         """NPU -> memory directly."""
-        for t in (self.traffic, self._t(tenant)):
-            t.dram_write += nbytes
-            t.noc += nbytes
+        self.ledger.charge(tenant, dram_write=nbytes, noc=nbytes)
 
     def multicast_read(self, tenant: str, cpt: CachePageTable, vcaddr: int,
                        nbytes: int, group_size: int) -> int:
@@ -195,21 +220,15 @@ class Nec:
         missed = 0
         for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
             self._check_mapped(cpt, line)
-            for t in (self.traffic, self._t(tenant)):
-                t.accesses += 1
             if line in res:
-                for t in (self.traffic, self._t(tenant)):
-                    t.hits += 1
-                    t.cache_read += lb
-                    t.noc += lb * group_size
+                self.ledger.charge(tenant, accesses=1, hits=1, cache_read=lb,
+                                   noc=lb * group_size)
             else:
                 missed += lb
                 res.add(line)
-                for t in (self.traffic, self._t(tenant)):
-                    t.dram_read += lb
-                    t.cache_write += lb
-                    t.cache_read += lb
-                    t.noc += lb * group_size
+                self.ledger.charge(tenant, accesses=1, dram_read=lb,
+                                   cache_write=lb, cache_read=lb,
+                                   noc=lb * group_size)
         return missed
 
     def multicast_bypass_read(self, tenant: str, nbytes: int, group_size: int) -> None:
@@ -217,6 +236,24 @@ class Nec:
         ``group_size`` under private fetching)."""
         if group_size < 1:
             raise NecError("multicast group must be >= 1")
-        for t in (self.traffic, self._t(tenant)):
-            t.dram_read += nbytes
-            t.noc += nbytes * group_size
+        self.ledger.charge(tenant, dram_read=nbytes, noc=nbytes * group_size)
+
+    # -- bulk layer-level accounting ------------------------------------
+    def charge_layer_execution(self, tenant: str, read_bytes: int,
+                               write_bytes: int, access_bytes: int,
+                               group_size: int = 1) -> None:
+        """Charge one layer's execution in bulk (line-level semantics are
+        exercised by codegen validation; the runtime and the simulator
+        charge at layer granularity).  ``access_bytes`` is the logical
+        NPU->cache request volume; hits are whatever part of it did not
+        have to touch DRAM.  With ``group_size`` > 1 one fetch serves the
+        whole NPU group (multicast), costing extra NoC deliveries only.
+        """
+        lb = self.config.line_bytes
+        noc = access_bytes * max(1, group_size)
+        self.ledger.charge(
+            tenant,
+            dram_read=read_bytes, dram_write=write_bytes,
+            accesses=max(1, access_bytes // lb),
+            hits=max(0, access_bytes - read_bytes - write_bytes) // lb,
+            noc=noc)

@@ -1,0 +1,224 @@
+"""Pluggable cache policies: the strategy layer of the unified
+multi-tenant runtime.
+
+Every scheduler the paper compares — the transparent-LLC baselines
+(``baseline`` / ``moca`` / ``aurora``, defined in sim/schedulers.py) and
+the NPU-controlled CaMDN variants (``camdn_hw`` / ``camdn``, defined
+here) — implements one :class:`CachePolicy` protocol and drives the
+*same* :class:`~repro.core.runtime.TenantTask` state machine:
+
+  select(task, now)        -> Selection      (which candidate, how many
+                                              pages, timeout horizon)
+  on_timeout(task, now)    -> Selection      (downgrade after a failed
+                                              page wait)
+  on_grant(task, now)      -> ExecutionPlan  (price the layer, charge
+                                              traffic through the NEC
+                                              ledger)
+  on_layer_end(task, now)  -> None           (release pages, advance the
+                                              cursor, update profiles)
+
+plus ``attach``/``detach`` for dynamic tenancy (open-loop arrivals and
+departures with page reclamation).  Keeping one protocol means every
+comparison is apples-to-apples: one task state machine, one traffic
+ledger, one event engine — the policies differ only in *decisions*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+
+from repro.core.allocator import AHEAD_FRACTION, DynamicCacheAllocator, Selection
+from repro.core.mct import MCT, MappingCandidate
+from repro.core.types import LayerSpec
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    compute_s: float
+    dram_read_bytes: int
+    dram_write_bytes: int
+    access_bytes: int      # logical NPU->cache request bytes (for hit rate)
+
+
+@runtime_checkable
+class CachePolicy(Protocol):
+    """Structural protocol every scheduler policy implements."""
+
+    name: str
+
+    def attach(self, task) -> None: ...
+    def detach(self, task) -> None: ...
+    def select(self, task, now: float) -> Selection: ...
+    def on_timeout(self, task, now: float) -> Selection: ...
+    def on_grant(self, task, now: float) -> ExecutionPlan: ...
+    def on_layer_end(self, task, now: float) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# shared pricing helpers (identical math for every NPU-controlled policy)
+# ---------------------------------------------------------------------------
+def split_layer_traffic(task, cand: MappingCandidate) -> Tuple[int, int]:
+    """(dram_read, dram_write) for the task's current layer under
+    ``cand``: writes are the part of the layer output that reaches DRAM
+    (an LBM block keeps intermediates cache-resident until the tail)."""
+    i = task.layer_idx
+    layer: LayerSpec = task.model.graph.layers[i]
+    if cand.kind == "LBM":
+        blk = task.model.mapping.block_of(i)
+        wr = layer.output_bytes if i == blk[1] - 1 else 0
+    else:
+        wr = layer.output_bytes
+    rd = max(0, cand.dram_bytes - wr)
+    return rd, wr
+
+
+def release_after_layer(task) -> bool:
+    """End-of-layer page release shared by the NPU-controlled policies:
+    LWM pages free immediately, LBM pages persist to the block tail.
+    Returns whether the release happened (the block ended)."""
+    release = True
+    if task.selection.candidate.kind == "LBM" and task.lbm_block is not None:
+        release = (task.layer_idx == task.lbm_block[1] - 1)
+        if release:
+            task.lbm_block = None
+    if release:
+        task.release_pages()
+    return release
+
+
+def charge_and_plan(task, cand: MappingCandidate) -> ExecutionPlan:
+    """Charge the layer through the NEC traffic ledger and build the
+    engine-facing plan.  Used by every NPU-controlled policy so CaMDN
+    variants price layers identically."""
+    rd, wr = split_layer_traffic(task, cand)
+    access = task.model.stream_bytes[task.layer_idx]
+    task.nec.charge_layer_execution(task.id, rd, wr, access,
+                                    group_size=task.group_size)
+    compute_s = cand.flops / (task.model.mcfg.compute_flops * task.group_size)
+    return ExecutionPlan(compute_s, rd, wr, access)
+
+
+# ---------------------------------------------------------------------------
+class CamdnPolicy:
+    """CaMDN(Full): Algorithm 1 dynamic allocation + LBM + timeouts,
+    delegated to :class:`DynamicCacheAllocator`."""
+
+    name = "camdn"
+
+    def __init__(self, allocator: DynamicCacheAllocator):
+        self.allocator = allocator
+
+    # -- tenancy -------------------------------------------------------
+    def attach(self, task) -> None:
+        self.allocator.register_task(task.id)
+
+    def detach(self, task) -> None:
+        self.allocator.remove_task(task.id)
+
+    # -- per-layer decisions -------------------------------------------
+    def select(self, task, now: float) -> Selection:
+        i = task.layer_idx
+        block = task.model.mapping.block_of(i)
+        return self.allocator.select(
+            task.id, task.mct(), now,
+            layer_t_est=task.model.layer_t_est[i],
+            block_t_est=task.model.block_t_est[block],
+            is_head_of_block=task.model.mapping.is_head_of_block(i))
+
+    def on_timeout(self, task, now: float) -> Selection:
+        cand = self.allocator.on_timeout_downgrade(
+            task.mct(), task.selection.candidate)
+        t_ahead = now + task.model.layer_t_est[task.layer_idx] * AHEAD_FRACTION
+        return Selection(cand, cand.p_need, t_ahead)
+
+    def on_grant(self, task, now: float) -> ExecutionPlan:
+        cand = task.selection.candidate
+        if cand.kind == "LBM" and not self.allocator.has_enabled_lbm(task.id):
+            self.allocator.set_lbm(task.id, True)
+            task.lbm_block = task.model.mapping.block_of(task.layer_idx)
+        return charge_and_plan(task, cand)
+
+    def on_layer_end(self, task, now: float) -> None:
+        lbm_was_on = task.lbm_block is not None
+        if release_after_layer(task) and lbm_was_on:
+            self.allocator.set_lbm(task.id, False)
+        task.advance_layer(now)
+        # --- profile update (Algorithm 1 Data arrays) ------------------
+        if not task.done:
+            nxt = task.layer_idx
+            mct_next = task.model.mapping.mcts[nxt]
+            if self.allocator.has_enabled_lbm(task.id) and mct_next.lbm is not None:
+                # LBM continues: the allocation persists unchanged
+                next_need = task.held_pages
+            else:
+                # steady-state prediction: a task tends to re-select the
+                # candidate class matching its current allocation
+                next_need = mct_next.best_fit(
+                    max(task.held_pages, mct_next.min_pages)).p_need
+            self.allocator.update_profile(
+                task.id, now, next_realloc_in=task.model.layer_t_est[nxt],
+                next_p_need=next_need, p_alloc=task.held_pages)
+        else:
+            self.allocator.update_profile(task.id, now, 0.0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+class StaticQuotaPolicy:
+    """CaMDN(HW-only): NPU-controlled exclusive regions with an equal
+    static page split; best-fit candidate selection inside the fixed
+    quota, no dynamic borrowing.  The quota is recomputed when tenants
+    arrive or depart (an equal split over the *current* tenant set)."""
+
+    name = "camdn_hw"
+
+    def __init__(self, cache):
+        self.cache = cache
+        self._attached: Dict[str, object] = {}
+
+    @property
+    def quota(self) -> int:
+        return self.cache.config.num_pages // max(1, len(self._attached))
+
+    # -- tenancy -------------------------------------------------------
+    def attach(self, task) -> None:
+        self._attached[task.id] = task
+
+    def detach(self, task) -> None:
+        self._attached.pop(task.id, None)
+
+    # -- per-layer decisions -------------------------------------------
+    def select(self, task, now: float) -> Selection:
+        i = task.layer_idx
+        mct: MCT = task.mct()
+        cand: Optional[MappingCandidate] = None
+        if (mct.lbm is not None and task.lbm_block is not None
+                and i < task.lbm_block[1]):
+            cand = mct.lbm        # block already running under LBM
+        elif (mct.lbm is not None and task.model.mapping.is_head_of_block(i)
+              and mct.lbm.p_need <= self.quota):
+            cand = mct.lbm
+        if cand is None:
+            cand = mct.best_fit(self.quota)
+        t_ahead = now + task.model.layer_t_est[i] * AHEAD_FRACTION
+        return Selection(cand, cand.p_need, t_ahead)
+
+    def on_timeout(self, task, now: float) -> Selection:
+        mct = task.mct()
+        cur = task.selection.candidate
+        if cur.kind == "LBM":
+            cand = mct.best_fit(max(0, cur.p_need - 1))
+        else:
+            cand = mct.next_smaller(cur)
+        t_ahead = now + task.model.layer_t_est[task.layer_idx] * AHEAD_FRACTION
+        return Selection(cand, cand.p_need, t_ahead)
+
+    def on_grant(self, task, now: float) -> ExecutionPlan:
+        cand = task.selection.candidate
+        if cand.kind == "LBM" and task.lbm_block is None:
+            task.lbm_block = task.model.mapping.block_of(task.layer_idx)
+        return charge_and_plan(task, cand)
+
+    def on_layer_end(self, task, now: float) -> None:
+        release_after_layer(task)
+        task.advance_layer(now)

@@ -3,41 +3,38 @@ wraps Algorithm 1 (paper Fig. 6, right side).
 
 The runtime is deliberately *time-agnostic*: a discrete-event engine
 (sim/engine.py) or a real serving loop (launch/serve.py) drives it by
-calling the state-machine methods and owning the clock.  Per layer:
+calling the state-machine methods and owning the clock.  The *decisions*
+— which candidate to run, how many pages to request, when to downgrade,
+when to release — are delegated to a pluggable
+:class:`~repro.core.policy.CachePolicy`, so the CaMDN variants and the
+transparent-LLC baselines all drive this one state machine.  Per layer:
 
-  1. ``begin_layer(now)``   -> Selection (Algorithm 1)
+  1. ``begin_layer(now)``   -> policy.select (Algorithm 1 for CaMDN)
   2. engine tries to allocate ``p_cur`` pages; if unavailable it waits
      until ``t_ahead``; on timeout calls ``on_timeout`` which downgrades
      the candidate; repeats.
   3. ``start_execution(now, granted)`` installs CPT mappings and returns
      an ExecutionPlan (compute seconds + DRAM bytes) for the engine's
-     bandwidth-shared resource; traffic is charged to the NEC.
+     bandwidth-shared resource; traffic is charged through the NEC's
+     traffic ledger.
   4. ``end_layer(now)``     -> frees LWM pages (LBM pages persist to the
      block tail), updates the allocator profiles, advances the layer
      cursor.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.allocator import DynamicCacheAllocator, Selection
 from repro.core.cache import SharedCache
 from repro.core.cpt import CachePageTable
 from repro.core.lbm import build_model_mapping
 from repro.core.mapping import MapperConfig, map_layer_lwm
-from repro.core.mct import MappingCandidate, ModelMapping
+from repro.core.mct import MCT, ModelMapping
 from repro.core.nec import Nec
-from repro.core.types import LayerKind, ModelGraph
-
-
-@dataclasses.dataclass
-class ExecutionPlan:
-    compute_s: float
-    dram_read_bytes: int
-    dram_write_bytes: int
-    access_bytes: int      # logical NPU->cache request bytes (for hit rate)
+from repro.core.policy import CachePolicy, CamdnPolicy, ExecutionPlan
+from repro.core.types import ModelGraph
 
 
 class TenantModel:
@@ -64,51 +61,55 @@ class TenantModel:
 
 
 class TenantTask:
-    """One running instance of a model on (a group of) NPUs."""
+    """One running instance of a model on (a group of) NPUs.
+
+    Pure mechanism: page/CPT bookkeeping and the layer cursor.  All
+    decisions go through ``self.policy``; passing a
+    :class:`DynamicCacheAllocator` instead of a policy wraps it in
+    :class:`CamdnPolicy` (the paper's full system, and the historical
+    constructor signature)."""
 
     def __init__(self, task_id: str, model: TenantModel, cache: SharedCache,
-                 nec: Nec, allocator: DynamicCacheAllocator,
+                 nec: Nec,
+                 policy: Union[CachePolicy, DynamicCacheAllocator],
                  group_size: int = 1, deadline_s: float = math.inf):
         self.id = task_id
         self.model = model
         self.cache = cache
         self.nec = nec
-        self.allocator = allocator
+        if isinstance(policy, DynamicCacheAllocator):
+            policy = CamdnPolicy(policy)
+        self.policy: CachePolicy = policy
         self.group_size = group_size
         self.deadline_s = deadline_s
         self.cpt = CachePageTable(cache.config)
         self.layer_idx = 0
         self.selection: Optional[Selection] = None
         self._held_pages: List[int] = []
-        self._lbm_block: Optional[Tuple[int, int]] = None
+        self.lbm_block: Optional[Tuple[int, int]] = None
         self.started_at: float = 0.0
         self.finished_at: Optional[float] = None
-        allocator.register_task(task_id)
+        self.policy.attach(self)
 
     # ------------------------------------------------------------------
     @property
     def done(self) -> bool:
         return self.layer_idx >= self.model.num_layers
 
-    def _mct(self):
+    @property
+    def held_pages(self) -> int:
+        return len(self._held_pages)
+
+    def mct(self) -> MCT:
         return self.model.mapping.mcts[self.layer_idx]
 
     def begin_layer(self, now: float) -> Selection:
-        i = self.layer_idx
-        block = self.model.mapping.block_of(i)
-        sel = self.allocator.select(
-            self.id, self._mct(), now,
-            layer_t_est=self.model.layer_t_est[i],
-            block_t_est=self.model.block_t_est[block],
-            is_head_of_block=self.model.mapping.is_head_of_block(i))
-        self.selection = sel
-        return sel
+        self.selection = self.policy.select(self, now)
+        return self.selection
 
     def on_timeout(self, now: float) -> Selection:
         assert self.selection is not None
-        cand = self.allocator.on_timeout_downgrade(self._mct(), self.selection.candidate)
-        t_ahead = now + self.model.layer_t_est[self.layer_idx] * 0.2
-        self.selection = Selection(cand, cand.p_need, t_ahead)
+        self.selection = self.policy.on_timeout(self, now)
         return self.selection
 
     def pages_to_request(self) -> int:
@@ -117,80 +118,39 @@ class TenantTask:
 
     # ------------------------------------------------------------------
     def start_execution(self, now: float, granted: List[int]) -> ExecutionPlan:
-        """Install CPT mappings for granted pages and charge traffic."""
-        sel = self.selection
-        assert sel is not None
+        """Install CPT mappings for granted pages, then let the policy
+        price the layer and charge traffic through the NEC ledger."""
+        assert self.selection is not None
         if granted:
             base = len(self._held_pages)
             self._held_pages.extend(granted)
             self.cpt.map_pages(granted, base_vcpn=base)
-        cand = sel.candidate
-        if cand.kind == "LBM":
-            if not self.allocator.has_enabled_lbm(self.id):
-                self.allocator.set_lbm(self.id, True)
-                self._lbm_block = self.model.mapping.block_of(self.layer_idx)
-        i = self.layer_idx
-        layer = self.model.graph.layers[i]
-        # --- traffic split: writes = layer output that reaches DRAM ------
-        if cand.kind == "LBM":
-            blk = self.model.mapping.block_of(i)
-            is_tail = (i == blk[1] - 1)
-            wr = layer.output_bytes if is_tail else 0
-        else:
-            wr = layer.output_bytes
-        rd = max(0, cand.dram_bytes - wr)
-        access = self.model.stream_bytes[i]
-        # --- NEC accounting (bulk; line-level semantics in nec.py) -------
-        t = self.nec._t(self.id)
-        lb = self.cache.config.line_bytes
-        for trf in (self.nec.traffic, t):
-            trf.dram_read += rd
-            trf.dram_write += wr
-            trf.accesses += max(1, access // lb)
-            trf.hits += max(0, (access - cand.dram_bytes)) // lb
-            trf.noc += access
-            # multicast: one fetch serves the whole NPU group
-            if self.group_size > 1:
-                trf.noc += access * (self.group_size - 1)
-        compute_s = cand.flops / (self.model.mcfg.compute_flops * self.group_size)
-        return ExecutionPlan(compute_s, rd, wr, access)
+        return self.policy.on_grant(self, now)
 
     # ------------------------------------------------------------------
     def end_layer(self, now: float) -> None:
-        sel = self.selection
-        assert sel is not None
-        i = self.layer_idx
-        # LBM pages persist to the end of the block; LWM pages release now
-        release = True
-        if sel.candidate.kind == "LBM" and self._lbm_block is not None:
-            release = (i == self._lbm_block[1] - 1)
-            if release:
-                self.allocator.set_lbm(self.id, False)
-                self._lbm_block = None
-        if release and self._held_pages:
+        assert self.selection is not None
+        self.policy.on_layer_end(self, now)
+
+    def release_pages(self) -> None:
+        """Return every held page to the pool and drop residency + CPT
+        mappings (also the departure/reclamation path)."""
+        if self._held_pages:
             self.cache.free(self.id, self._held_pages)
             self.nec.invalidate_tenant(self.id)
             self._held_pages = []
             self.cpt.clear()
-        # --- profile update (Algorithm 1 Data arrays) ---------------------
+
+    def advance_layer(self, now: float) -> None:
         self.layer_idx += 1
-        if not self.done:
-            nxt = self.layer_idx
-            mct_next = self.model.mapping.mcts[nxt]
-            if self.allocator.has_enabled_lbm(self.id) and mct_next.lbm is not None:
-                # LBM continues: the allocation persists unchanged
-                next_need = len(self._held_pages)
-            else:
-                # steady-state prediction: a task tends to re-select the
-                # candidate class matching its current allocation
-                next_need = mct_next.best_fit(max(len(self._held_pages),
-                                                  mct_next.min_pages)).p_need
-            self.allocator.update_profile(
-                self.id, now, next_realloc_in=self.model.layer_t_est[nxt],
-                next_p_need=next_need, p_alloc=len(self._held_pages))
-        else:
+        if self.done:
             self.finished_at = now
-            self.allocator.update_profile(self.id, now, 0.0, 0, 0)
+
+    def depart(self) -> None:
+        """Dynamic tenancy: leave the system, reclaiming all pages and
+        detaching from the policy (allocator profiles, quotas)."""
+        self.release_pages()
+        self.policy.detach(self)
 
     def reset_for_next_inference(self) -> None:
         """Re-arm the task for another inference of the same model."""

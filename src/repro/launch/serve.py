@@ -1,12 +1,16 @@
 """Multi-tenant serving driver: CaMDN as a first-class runtime feature.
 
-Co-locates several models on one device pool.  Each tenant's layer
-blocks carry multiple execution *candidates* — Pallas tile configs at
-different VMEM footprints (LWM) and the fused-block kernel (LBM) — and
-the CaMDN dynamic allocator (core/allocator.py, Algorithm 1) arbitrates
-the shared VMEM page pool between tenants at every scheduling quantum:
+Co-locates several models on one device pool.  Each tenant's FFN block
+is described as a small :class:`~repro.core.types.ModelGraph` and mapped
+by the *same* offline machinery the simulator uses
+(:class:`~repro.core.runtime.TenantModel` -> per-layer MCTs with LWM
+candidates at every usage limit + the fused-block LBM candidate), and
+the per-step scheduling runs the same
+:class:`~repro.core.runtime.TenantTask` state machine under a
+:class:`~repro.core.policy.CamdnPolicy` — the serving loop and the
+simulator share one CachePolicy runtime:
 
-  pages granted -> core/vmem.select_tile() -> kernel variant executed.
+  pages granted -> candidate (LBM fused kernel vs LWM tiles) -> decode.
 
 On CPU this runs reduced models with the interpret-mode kernels; on TPU
 the same loop binds to the compiled kernel variants.  The allocation
@@ -24,40 +28,47 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.allocator import DynamicCacheAllocator
+from repro.core.allocator import DynamicCacheAllocator, Selection
 from repro.core.cache import CacheConfig, SharedCache
-from repro.core.mct import MCT, CacheMapEntry, MappingCandidate
+from repro.core.mapping import MapperConfig
 from repro.core.nec import Nec
-from repro.core.vmem import (VMEM_PAGES, PAGE_BYTES, TileConfig,
-                             candidates_for_matmul, fused_ffn_admissible,
-                             select_tile)
+from repro.core.policy import CamdnPolicy
+from repro.core.runtime import TenantModel, TenantTask
+from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph
+from repro.core.vmem import LANE, PAGE_BYTES, VMEM_PAGES
 from repro.models import model as M
 from repro.models.base import ArchConfig, get_arch
 from repro.models.transformer import init_caches
 
 
-def _ffn_mct(cfg: ArchConfig, seq_block: int) -> MCT:
-    """Build the MCT for one transformer layer's FFN block: LWM tile
-    candidates + the LBM fused-kernel candidate."""
+def _ffn_graph(name: str, cfg: ArchConfig, seq_block: int) -> ModelGraph:
+    """One transformer layer's FFN as a schedulable layer graph
+    (gate/up -> down), so the core mapper derives its MCTs — LWM tile
+    candidates per usage limit plus the fused-block LBM candidate —
+    instead of serve.py hand-building them.  ``seq_block`` is padded to
+    the 128-lane MXU tile: the Pallas kernels compute on padded tiles,
+    so the schedulable VMEM working set is the padded one."""
     eb = 2 if cfg.dtype == "bfloat16" else 4
+    seq_block = max(seq_block, LANE)
     d, f = cfg.d_model, max(cfg.d_ff, cfg.d_model)
-    lwms = []
-    for tile in candidates_for_matmul(seq_block, f, d, eb):
-        flops = 2 * seq_block * d * f * 3
-        dram = (seq_block * d + 3 * d * f + 2 * seq_block * f + seq_block * d) * eb
-        lwms.append(MappingCandidate(
-            kind="LWM", p_need=tile.pages, dram_bytes=dram, flops=flops,
-            loops=(), cache_map=(CacheMapEntry("tiles", 0, tile.pages),),
-            usage_limit_bytes=tile.pages * PAGE_BYTES))
-    inter = seq_block * f * eb
-    lbm_pages = -(-inter // PAGE_BYTES) + lwms[0].p_need
-    lbm = MappingCandidate(
-        kind="LBM", p_need=lbm_pages,
-        dram_bytes=(seq_block * d + 3 * d * f + seq_block * d) * eb,
-        flops=lwms[0].flops, loops=(),
-        cache_map=(CacheMapEntry("hidden", 0, lbm_pages),),
-        usage_limit_bytes=lbm_pages * PAGE_BYTES)
-    return MCT(layer_name="ffn", lwms=lwms, lbm=lbm)
+    up = LayerSpec(
+        "ffn.up", LayerKind.GEMM,
+        (GemmDims(M=seq_block, N=f, K=d, reps=2, b_reused=False),),  # gate+up
+        input_bytes=seq_block * d * eb, output_bytes=seq_block * f * eb,
+        weight_bytes=2 * d * f * eb, elem_bytes=eb)
+    down = LayerSpec(
+        "ffn.down", LayerKind.GEMM,
+        (GemmDims(M=seq_block, N=d, K=f),),
+        input_bytes=seq_block * f * eb, output_bytes=seq_block * d * eb,
+        weight_bytes=f * d * eb, elem_bytes=eb)
+    return ModelGraph(f"{name}.ffn", [up, down])
+
+
+def _vmem_mapper(total_pages: int) -> MapperConfig:
+    """MapperConfig solving against the VMEM page pool instead of the
+    SoC shared cache: same mapper, different substrate."""
+    return MapperConfig(page_bytes=PAGE_BYTES,
+                        npu_subspace_bytes=total_pages * PAGE_BYTES)
 
 
 @dataclasses.dataclass
@@ -67,9 +78,9 @@ class Tenant:
     params: Any
     caches: Any
     decode: Any
+    task: TenantTask
     index: int = 0
     tokens_served: int = 0
-    mct: Optional[MCT] = None
     choices: List[str] = dataclasses.field(default_factory=list)
 
 
@@ -97,6 +108,8 @@ class MultiTenantServer:
             page_bytes=PAGE_BYTES))
         self.nec = Nec(self.cache)
         self.alloc = DynamicCacheAllocator(self.cache)
+        self.policy = CamdnPolicy(self.alloc)
+        self.mapper = _vmem_mapper(total_pages)
         self.tenants: List[Tenant] = []
         self.batch = batch
         for i, aid in enumerate(arch_ids):
@@ -104,31 +117,41 @@ class MultiTenantServer:
             params = M.init_params(cfg, jax.random.PRNGKey(i))
             caches = init_caches(params, cfg, batch, max_len)
             dec = jax.jit(M.make_decode_step(cfg))
-            t = Tenant(f"t{i}:{aid}", cfg, params, caches, dec,
-                       mct=_ffn_mct(cfg, seq_block=batch))
-            self.alloc.register_task(t.tid)
-            self.tenants.append(t)
+            tid = f"t{i}:{aid}"
+            tm = TenantModel(_ffn_graph(aid, cfg, seq_block=batch),
+                             self.mapper)
+            task = TenantTask(tid, tm, self.cache, self.nec, self.policy)
+            self.tenants.append(Tenant(tid, cfg, params, caches, dec, task))
+
+    def _schedule_block(self, t: Tenant, now: float) -> None:
+        """Run the tenant's FFN block through the unified TenantTask
+        state machine: select -> (timeout-downgrade)* -> grant -> end,
+        charging traffic through the NEC ledger."""
+        task = t.task
+        if task.done:
+            task.reset_for_next_inference()
+        while not task.done:
+            sel = task.begin_layer(now)
+            granted = self.cache.alloc(t.tid, task.pages_to_request())
+            attempts = 0
+            while granted is None and attempts < len(task.mct().lwms) + 2:
+                # synchronous serving loop: a failed grant downgrades
+                # immediately (the simulator waits out t_ahead instead)
+                sel = task.on_timeout(now)
+                granted = self.cache.alloc(t.tid, task.pages_to_request())
+                attempts += 1
+            if granted is None:
+                # starved: stream the layer with whatever is already held
+                sel = Selection(task.mct().lwms[0], 0, now)
+                task.selection = sel
+                granted = []
+            task.start_execution(now, granted)
+            t.choices.append(f"{sel.candidate.kind}:{task.held_pages}p")
+            task.end_layer(now)
 
     def _serve_one(self, t: Tenant, now: float) -> None:
         # --- CaMDN selection for this tenant's layer block ------------
-        sel = self.alloc.select(
-            t.tid, t.mct, now, layer_t_est=1e-4, block_t_est=1e-3,
-            is_head_of_block=True)
-        granted = self.cache.alloc(t.tid, sel.p_cur)
-        attempts = 0
-        while granted is None and attempts < 4:
-            cand = self.alloc.on_timeout_downgrade(t.mct, sel.candidate)
-            sel = dataclasses.replace(sel, candidate=cand, p_cur=cand.p_need)
-            granted = self.cache.alloc(t.tid, sel.p_cur)
-            attempts += 1
-        if granted is None:
-            granted = self.cache.alloc(t.tid, 0) or []
-            sel = dataclasses.replace(sel, candidate=t.mct.lwms[0], p_cur=0)
-        kind = sel.candidate.kind
-        pages = len(granted)
-        t.choices.append(f"{kind}:{pages}p")
-        # traffic accounting through the NEC (bypass for streamed weights)
-        self.nec.bypass_read(t.tid, sel.candidate.dram_bytes)
+        self._schedule_block(t, now)
 
         # --- real decode step -----------------------------------------
         token = jnp.full((self.batch, 1), t.index % t.cfg.vocab_size,
@@ -143,11 +166,6 @@ class MultiTenantServer:
                                      jnp.int32(t.index))
         t.index += 1
         t.tokens_served += self.batch
-        # --- release (LWM pages free at block end) ---------------------
-        if granted:
-            self.cache.free(t.tid, granted)
-        self.alloc.update_profile(t.tid, now, next_realloc_in=1e-4,
-                                  next_p_need=sel.p_cur, p_alloc=0)
 
     def _slack(self, t: Tenant, now: float) -> float:
         """Seconds of budget headroom per token (negative = late)."""

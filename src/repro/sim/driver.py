@@ -1,10 +1,25 @@
 """Multi-tenant simulation driver: wires the event engine, the DRAM
-processor-sharing pool, the NPU core pool, the CaMDN runtime (or a
-transparent-LLC baseline) and the metrics together.
+processor-sharing pool, the NPU core pool, the unified CachePolicy
+runtime and the metrics together.
+
+Every scheduler — transparent-LLC baselines and CaMDN variants alike —
+drives the *same* :class:`~repro.core.runtime.TenantTask` state machine
+through one :class:`TenantDriver`; the policies differ only in the
+decisions they make (see core/policy.py and sim/schedulers.py), and all
+traffic flows through the NEC's :class:`~repro.core.nec.TrafficLedger`.
+
+Tenancy is dynamic: tenants may arrive mid-run (open-loop Poisson
+arrivals), run a bounded number of inferences, and depart — reclaiming
+every cache page they held.
 
 Usage:
     sim = MultiTenantSim(models=[...], scheduler="camdn")
     result = sim.run(duration_s=0.2)
+
+    # open-loop arrivals joining a resident tenant mix:
+    sim = MultiTenantSim([g0], "camdn",
+                         arrivals=PoissonArrivals(rate_per_s=200,
+                                                  models=[g1, g2]))
 """
 from __future__ import annotations
 
@@ -22,7 +37,7 @@ from repro.core.types import ModelGraph
 from repro.sim.engine import CorePool, DramResource, Engine
 from repro.sim.schedulers import (SCHEDULERS, BandwidthPolicy, CorePolicy,
                                   SchedulerSpec, TransparentParams,
-                                  transparent_layer_dram, transparent_plan)
+                                  make_policy)
 
 
 @dataclasses.dataclass
@@ -36,6 +51,37 @@ class SimConfig:
 
 
 @dataclasses.dataclass
+class TenantSpec:
+    """One tenant of a dynamic-tenancy scenario."""
+    model: ModelGraph
+    arrive_at: float = 0.0           # seconds into the run
+    n_inferences: Optional[int] = None   # depart after this many (None = horizon)
+    qos_ms: Optional[float] = None   # per-tenant latency target override
+    group_size: int = 1
+
+
+@dataclasses.dataclass
+class PoissonArrivals:
+    """Open-loop arrival process: ``n_arrivals`` tenants drawn from
+    ``models`` join at exponential inter-arrival gaps and depart after
+    ``n_inferences`` inferences (pages reclaimed on departure)."""
+    rate_per_s: float
+    models: List[ModelGraph]
+    n_arrivals: int = 8
+    n_inferences: Optional[int] = 4
+    seed: int = 0
+
+    def specs(self) -> List[TenantSpec]:
+        rng = random.Random(self.seed)
+        t, out = 0.0, []
+        for _ in range(self.n_arrivals):
+            t += rng.expovariate(self.rate_per_s)
+            out.append(TenantSpec(rng.choice(self.models), arrive_at=t,
+                                  n_inferences=self.n_inferences))
+        return out
+
+
+@dataclasses.dataclass
 class TaskResult:
     task_id: str
     model: str
@@ -44,6 +90,8 @@ class TaskResult:
     deadline_met: int = 0
     inferences: int = 0
     traffic: Traffic = dataclasses.field(default_factory=Traffic)
+    arrived_at: float = 0.0
+    departed_at: Optional[float] = None
 
     @property
     def dram_per_inference(self) -> float:
@@ -87,6 +135,11 @@ class SimResult:
         return self.traffic.dram_total / n if n else 0.0
 
     @property
+    def throughput(self) -> float:
+        """Completed inferences per second of simulated time."""
+        return self.total_inferences / self.duration_s if self.duration_s else 0.0
+
+    @property
     def sla_rate(self) -> float:
         tot = sum(t.inferences for t in self.tasks)
         met = sum(t.deadline_met for t in self.tasks)
@@ -103,19 +156,37 @@ class SimResult:
 
 
 # ---------------------------------------------------------------------------
-class _BaseDriver:
-    """Per-task inference loop skeleton."""
+class TenantDriver:
+    """Event-loop glue for one tenant: acquire cores, walk the layer
+    state machine (with page waits/timeouts), race compute against the
+    shared DRAM pool, record per-inference metrics, and depart when the
+    tenant's work (or the horizon) is done.  Policy-agnostic: all cache
+    decisions go through ``sim.policy`` via the TenantTask."""
 
-    def __init__(self, sim: "MultiTenantSim", task_id: str, model: TenantModel):
+    def __init__(self, sim: "MultiTenantSim", task_id: str,
+                 model: TenantModel, spec: TenantSpec):
         self.sim = sim
         self.id = task_id
         self.model = model
-        self.result = TaskResult(task_id, model.graph.name, model.graph.qos_ms)
+        self.spec = spec
+        # a per-tenant qos_ms override IS the target; the global
+        # qos_level multiplier applies only to model-default targets
+        if spec.qos_ms is not None:
+            qos = spec.qos_ms
+        else:
+            qos = model.graph.qos_ms * sim.config.qos_level
+        self.qos_target_s = qos * 1e-3
+        self.result = TaskResult(task_id, model.graph.name, qos,
+                                 arrived_at=sim.engine.now)
+        self.task = TenantTask(task_id, model, sim.cache, sim.nec,
+                               sim.policy, group_size=spec.group_size)
         self.layer_idx = 0
         self.infer_start = 0.0
         self.cores_held = 0
         self._compute_done = False
         self._dram_done = False
+        self._timeout_gen = 0
+        self._waiting = False
         self.stopped = False
 
     # -- inference lifecycle -------------------------------------------
@@ -123,17 +194,20 @@ class _BaseDriver:
         self._begin_inference()
 
     def _begin_inference(self) -> None:
-        if self.sim.engine.now >= self.sim.horizon:
-            self.stopped = True
+        done_quota = (self.spec.n_inferences is not None
+                      and self.result.inferences >= self.spec.n_inferences)
+        if done_quota or self.sim.engine.now >= self.sim.horizon:
+            self._depart()
             return
         cores = self._cores_wanted()
         self.sim.cores.acquire(cores, lambda: self._on_cores(cores))
 
     def _on_cores(self, cores: int) -> None:
+        if self.task.done:
+            self.task.reset_for_next_inference()
         self.cores_held = cores
         self.infer_start = self.sim.engine.now
         self.layer_idx = 0
-        self.sim.active_tasks += 1
         self._enter_layer()
 
     def _finish_inference(self) -> None:
@@ -141,147 +215,27 @@ class _BaseDriver:
         lat = now - self.infer_start
         self.result.latencies.append(lat)
         self.result.inferences += 1
-        target = self.result.qos_ms * 1e-3 * self.sim.config.qos_level
-        if lat <= target:
+        if lat <= self.qos_target_s:
             self.result.deadline_met += 1
-        self.sim.active_tasks -= 1
         self.sim.cores.release(self.cores_held)
         self.cores_held = 0
         self._begin_inference()
 
-    # -- layer lifecycle (subclass hooks) --------------------------------
-    def _enter_layer(self) -> None:
-        raise NotImplementedError
+    def _depart(self) -> None:
+        """Leave the system: reclaim pages, detach from the policy, fold
+        this tenant's ledger entry into its result."""
+        if self.stopped:
+            return
+        self.stopped = True
+        if self._waiting and self in self.sim.page_waiters:
+            self.sim.page_waiters.remove(self)
+        self.task.depart()
+        self.result.departed_at = self.sim.engine.now
+        self.result.traffic = self.result.traffic.merged(
+            self.sim.nec.ledger.drop_tenant(self.id))
+        self.sim.wake_page_waiters()
 
-    def _execute(self, compute_s: float, dram_bytes: float) -> None:
-        self._compute_done = self._dram_done = False
-        eng = self.sim.engine
-        eng.schedule(compute_s, self._on_compute_done)
-        w = self._bw_weight()
-        # service-time inflation for the scheduler's DRAM efficiency
-        # (traffic counters stay pure byte counts)
-        eff = self.sim.spec.dram_efficiency
-        self.sim.dram.submit(dram_bytes / eff, self._on_dram_done, weight=w)
-
-    def _on_compute_done(self) -> None:
-        self._compute_done = True
-        if self._dram_done:
-            self._layer_done()
-
-    def _on_dram_done(self) -> None:
-        self._dram_done = True
-        if self._compute_done:
-            self._layer_done()
-
-    def _layer_done(self) -> None:
-        raise NotImplementedError
-
-    # -- policies ---------------------------------------------------------
-    def _slack_ratio(self) -> float:
-        target = self.result.qos_ms * 1e-3 * self.sim.config.qos_level
-        elapsed = self.sim.engine.now - self.infer_start
-        progress = max(self.layer_idx / max(1, self.model.num_layers), 0.05)
-        predicted = elapsed / progress
-        return predicted / target if target > 0 else 1.0
-
-    def _bw_weight(self) -> float:
-        return self.sim.bw_policy.weight(self._slack_ratio())
-
-    def _cores_wanted(self) -> int:
-        last = self._slack_ratio() if self.result.inferences else 1.0
-        return self.sim.core_policy.cores_for(last, self.sim.cores.free)
-
-
-class TransparentDriver(_BaseDriver):
-    """baseline / moca / aurora: transparent shared LLC."""
-
-    def __init__(self, sim, task_id, model):
-        super().__init__(sim, task_id, model)
-        self.plan = transparent_plan(model.graph, sim.config.mapper)
-
-    def _enter_layer(self) -> None:
-        i = self.layer_idx
-        rd, wr, access = transparent_layer_dram(
-            self.plan, i, self.sim.config.cache.total_bytes,
-            self.sim.distinct_active, self.sim.tparams)
-        lb = self.sim.config.cache.line_bytes
-        for t in (self.sim.traffic, self.result.traffic):
-            t.dram_read += rd
-            t.dram_write += wr
-            t.accesses += max(1, access // lb)
-            t.hits += max(0, access - rd - wr) // lb
-        comp = self.plan.compute_s[i] / max(1, self.cores_held)
-        self._execute(comp, rd + wr)
-
-    def _layer_done(self) -> None:
-        self.layer_idx += 1
-        if self.layer_idx >= self.model.num_layers:
-            self._finish_inference()
-        else:
-            self._enter_layer()
-
-
-class StaticCamdnDriver(_BaseDriver):
-    """CaMDN(HW-only): exclusive regions with an equal static page split;
-    candidate selection at the fixed quota; no borrowing, no waiting."""
-
-    def __init__(self, sim, task_id, model, quota_pages: int):
-        super().__init__(sim, task_id, model)
-        self.quota = quota_pages
-        self._lbm_until = -1  # layer index (exclusive) covered by active LBM
-
-    def _enter_layer(self) -> None:
-        i = self.layer_idx
-        mct = self.model.mapping.mcts[i]
-        cand = None
-        if mct.lbm is not None and i < self._lbm_until:
-            cand = mct.lbm
-        elif (mct.lbm is not None and self.model.mapping.is_head_of_block(i)
-              and mct.lbm.p_need <= self.quota):
-            cand = mct.lbm
-            self._lbm_until = self.model.mapping.block_of(i)[1]
-        if cand is None:
-            cand = mct.best_fit(self.quota)
-        layer = self.model.graph.layers[i]
-        if cand.kind == "LBM":
-            blk = self.model.mapping.block_of(i)
-            wr = layer.output_bytes if i == blk[1] - 1 else 0
-        else:
-            wr = layer.output_bytes
-        rd = max(0, cand.dram_bytes - wr)
-        access = self.model.stream_bytes[i]
-        lb = self.sim.config.cache.line_bytes
-        for t in (self.sim.traffic, self.result.traffic):
-            t.dram_read += rd
-            t.dram_write += wr
-            t.accesses += max(1, access // lb)
-            t.hits += max(0, access - rd - wr) // lb
-        comp = cand.flops / (self.sim.config.mapper.compute_flops * max(1, self.cores_held))
-        self._execute(comp, rd + wr)
-
-    def _layer_done(self) -> None:
-        self.layer_idx += 1
-        if self.layer_idx >= self.model.num_layers:
-            self._lbm_until = -1
-            self._finish_inference()
-        else:
-            self._enter_layer()
-
-
-class CamdnDriver(_BaseDriver):
-    """CaMDN(Full): Algorithm 1 + page waits/timeouts via core/runtime."""
-
-    def __init__(self, sim, task_id, model):
-        super().__init__(sim, task_id, model)
-        self.task = TenantTask(task_id, model, sim.cache, sim.nec, sim.allocator)
-        self._timeout_gen = 0
-        self._waiting = False
-
-    def _on_cores(self, cores: int) -> None:
-        if self.task.done:
-            self.task.reset_for_next_inference()
-        super()._on_cores(cores)
-
+    # -- layer lifecycle ------------------------------------------------
     def _enter_layer(self) -> None:
         self.task.begin_layer(self.sim.engine.now)
         self._try_alloc()
@@ -323,6 +277,26 @@ class CamdnDriver(_BaseDriver):
         if self._waiting:
             self._try_alloc()
 
+    def _execute(self, compute_s: float, dram_bytes: float) -> None:
+        self._compute_done = self._dram_done = False
+        eng = self.sim.engine
+        eng.schedule(compute_s, self._on_compute_done)
+        w = self._bw_weight()
+        # service-time inflation for the scheduler's DRAM efficiency
+        # (traffic counters stay pure byte counts)
+        eff = self.sim.spec.dram_efficiency
+        self.sim.dram.submit(dram_bytes / eff, self._on_dram_done, weight=w)
+
+    def _on_compute_done(self) -> None:
+        self._compute_done = True
+        if self._dram_done:
+            self._layer_done()
+
+    def _on_dram_done(self) -> None:
+        self._dram_done = True
+        if self._compute_done:
+            self._layer_done()
+
     def _layer_done(self) -> None:
         self.task.end_layer(self.sim.engine.now)
         self.sim.wake_page_waiters()
@@ -332,12 +306,30 @@ class CamdnDriver(_BaseDriver):
         else:
             self._enter_layer()
 
+    # -- policies ---------------------------------------------------------
+    def _slack_ratio(self) -> float:
+        target = self.qos_target_s
+        elapsed = self.sim.engine.now - self.infer_start
+        progress = max(self.layer_idx / max(1, self.model.num_layers), 0.05)
+        predicted = elapsed / progress
+        return predicted / target if target > 0 else 1.0
+
+    def _bw_weight(self) -> float:
+        return self.sim.bw_policy.weight(self._slack_ratio())
+
+    def _cores_wanted(self) -> int:
+        last = self._slack_ratio() if self.result.inferences else 1.0
+        return self.sim.core_policy.cores_for(last, self.sim.cores.free)
+
 
 # ---------------------------------------------------------------------------
 class MultiTenantSim:
-    def __init__(self, models: List[ModelGraph], scheduler: str,
+    def __init__(self, models: Optional[List[ModelGraph]] = None,
+                 scheduler: str = "camdn",
                  config: Optional[SimConfig] = None,
-                 tparams: Optional[TransparentParams] = None):
+                 tparams: Optional[TransparentParams] = None,
+                 tenants: Optional[List[TenantSpec]] = None,
+                 arrivals: Optional[PoissonArrivals] = None):
         self.config = config or SimConfig()
         self.spec: SchedulerSpec = SCHEDULERS[scheduler]
         self.tparams = tparams or TransparentParams()
@@ -346,40 +338,36 @@ class MultiTenantSim:
         self.cores = CorePool(self.engine, self.config.n_cores)
         self.bw_policy = BandwidthPolicy(self.spec.bandwidth)
         self.core_policy = CorePolicy(self.spec.core_scaling)
-        self.active_tasks = 0
         self.horizon = math.inf
-        self.page_waiters: List[CamdnDriver] = []
+        self.page_waiters: List[TenantDriver] = []
 
         self.cache = SharedCache(self.config.cache)
         self.nec = Nec(self.cache)
         self.allocator = DynamicCacheAllocator(self.cache)
-        self.traffic = Traffic()  # transparent-path accounting
+        self.policy = make_policy(self.spec, self.cache, self.allocator,
+                                  self.config.mapper, self.tparams)
 
-        self.drivers: List[_BaseDriver] = []
-        tenant_models: Dict[str, TenantModel] = {}
-        for graph in models:
-            if graph.name not in tenant_models:
-                tenant_models[graph.name] = TenantModel(graph, self.config.mapper)
-        n = len(models)
-        quota = self.config.cache.num_pages // max(1, n)
-        for idx, graph in enumerate(models):
-            tid = f"t{idx}:{graph.name}"
-            tm = tenant_models[graph.name]
-            if not self.spec.camdn_cache:
-                d: _BaseDriver = TransparentDriver(self, tid, tm)
-            elif not self.spec.dynamic_alloc:
-                d = StaticCamdnDriver(self, tid, tm, quota)
-            else:
-                d = CamdnDriver(self, tid, tm)
-            self.drivers.append(d)
+        self._specs: List[TenantSpec] = [TenantSpec(g) for g in (models or [])]
+        self._specs += list(tenants or [])
+        if arrivals is not None:
+            self._specs += arrivals.specs()
+        self._specs.sort(key=lambda s: s.arrive_at)
 
-    @property
-    def distinct_active(self) -> int:
-        """Distinct model count among co-located tasks (same-model
-        instances share read-only weights in a transparent LLC; queued
-        tasks' data still occupies cache)."""
-        return len({d.result.model for d in self.drivers
-                    if not d.stopped}) or 1
+        self._tenant_models: Dict[str, TenantModel] = {}
+        self.drivers: List[TenantDriver] = []
+
+    def _model_for(self, graph: ModelGraph) -> TenantModel:
+        tm = self._tenant_models.get(graph.name)
+        if tm is None:
+            tm = self._tenant_models[graph.name] = TenantModel(
+                graph, self.config.mapper)
+        return tm
+
+    def _admit(self, spec: TenantSpec) -> None:
+        tid = f"t{len(self.drivers)}:{spec.model.name}"
+        d = TenantDriver(self, tid, self._model_for(spec.model), spec)
+        self.drivers.append(d)
+        d.start()
 
     def wake_page_waiters(self) -> None:
         for d in list(self.page_waiters):
@@ -387,16 +375,17 @@ class MultiTenantSim:
 
     def run(self, duration_s: float = 0.2) -> SimResult:
         self.horizon = duration_s
-        for d in self.drivers:
-            d.start()
+        for spec in self._specs:
+            if spec.arrive_at <= 0.0:
+                self._admit(spec)
+            elif spec.arrive_at < self.horizon:
+                self.engine.at(spec.arrive_at, lambda s=spec: self._admit(s))
         self.engine.run(until=math.inf)
-        total = self.traffic.merged(self.nec.traffic)
         for d in self.drivers:
-            per = self.nec.per_tenant.get(d.id)
-            if per is not None:
-                d.result.traffic = d.result.traffic.merged(per)
+            d._depart()   # idempotent; folds any residual ledger entry
         return SimResult(self.spec.name, [d.result for d in self.drivers],
-                         total, self.engine.now, self.dram.utilization)
+                         self.nec.ledger.total, self.engine.now,
+                         self.dram.utilization)
 
 
 def isolated_latencies(models: List[ModelGraph],

@@ -30,7 +30,10 @@ import bisect
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.allocator import Selection
 from repro.core.mapping import MapperConfig, map_layer_lwm
+from repro.core.mct import CacheMapEntry, MappingCandidate
+from repro.core.policy import ExecutionPlan
 from repro.core.types import LayerSpec, ModelGraph
 
 # absolute budget grid for transparent-cache traffic curves (bytes)
@@ -49,13 +52,15 @@ class TransparentModelPlan:
     compute_s: Tuple[float, ...]            # per-core seconds
 
 
-_PLAN_CACHE: Dict[Tuple[str, int], TransparentModelPlan] = {}
+# keyed on the config's *values* (MapperConfig is a frozen, hashable
+# dataclass): plans solved for one config are never reused for another
+_PLAN_CACHE: Dict[Tuple[str, MapperConfig], TransparentModelPlan] = {}
 
 
 def transparent_plan(graph: ModelGraph, mcfg: Optional[MapperConfig] = None
                      ) -> TransparentModelPlan:
     mcfg = mcfg or MapperConfig()
-    key = (graph.name, id(type(mcfg)))
+    key = (graph.name, mcfg)
     if key in _PLAN_CACHE:
         return _PLAN_CACHE[key]
     curves, stream, outs, ins, comp = [], [], [], [], []
@@ -157,6 +162,77 @@ class CorePolicy:
         return 1
 
 
+INF = float("inf")
+
+
+class TransparentPolicy:
+    """baseline / moca / aurora: transparent shared LLC, expressed as a
+    :class:`~repro.core.policy.CachePolicy` so it drives the same
+    :class:`~repro.core.runtime.TenantTask` state machine as CaMDN.
+
+    A transparent LLC grants no explicit pages (``p_cur`` = 0, the task
+    never waits); the layer is priced by the contention model
+    (:func:`transparent_layer_dram`) at the *current* number of distinct
+    co-located models, which the policy tracks through attach/detach —
+    dynamic tenancy changes the pressure mid-run, exactly as hardware
+    LRU would experience it."""
+
+    def __init__(self, name: str, cache_bytes: int,
+                 mcfg: Optional[MapperConfig] = None,
+                 params: Optional[TransparentParams] = None):
+        self.name = name
+        self.cache_bytes = cache_bytes
+        self.mcfg = mcfg or MapperConfig()
+        self.params = params or TransparentParams()
+        self._attached: Dict[str, str] = {}   # task id -> model name
+
+    @property
+    def distinct_active(self) -> int:
+        """Distinct model count among co-located tasks (same-model
+        instances share read-only weights in a transparent LLC)."""
+        return len(set(self._attached.values())) or 1
+
+    def _plan(self, task) -> TransparentModelPlan:
+        return transparent_plan(task.model.graph, self.mcfg)  # memoized
+
+    # -- tenancy -------------------------------------------------------
+    def attach(self, task) -> None:
+        self._attached[task.id] = task.model.graph.name
+
+    def detach(self, task) -> None:
+        self._attached.pop(task.id, None)
+
+    # -- per-layer decisions -------------------------------------------
+    def select(self, task, now: float) -> Selection:
+        i = task.layer_idx
+        rd, wr, access = transparent_layer_dram(
+            self._plan(task), i, self.cache_bytes, self.distinct_active,
+            self.params)
+        layer = task.model.graph.layers[i]
+        cand = MappingCandidate(
+            kind="LWM", p_need=0, dram_bytes=rd + wr, flops=layer.flops,
+            loops=(), cache_map=(CacheMapEntry("llc", 0, 0),),
+            usage_limit_bytes=0)
+        return Selection(cand, 0, INF)   # zero pages; never waits
+
+    def on_timeout(self, task, now: float) -> Selection:
+        return task.selection             # nothing to downgrade
+
+    def on_grant(self, task, now: float) -> ExecutionPlan:
+        i = task.layer_idx
+        cand = task.selection.candidate
+        plan = self._plan(task)
+        wr = plan.out_bytes[i]
+        rd = max(0, cand.dram_bytes - wr)
+        access = plan.stream_bytes[i]
+        task.nec.charge_layer_execution(task.id, rd, wr, access,
+                                        group_size=task.group_size)
+        return ExecutionPlan(plan.compute_s[i] / task.group_size, rd, wr, access)
+
+    def on_layer_end(self, task, now: float) -> None:
+        task.advance_layer(now)
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerSpec:
     name: str
@@ -184,3 +260,17 @@ SCHEDULERS: Dict[str, SchedulerSpec] = {
     "camdn_qos": SchedulerSpec("camdn_qos", True, True, "qos", True,
                                dram_efficiency=0.92),
 }
+
+
+def make_policy(spec: SchedulerSpec, cache, allocator,
+                mcfg: Optional[MapperConfig] = None,
+                tparams: Optional[TransparentParams] = None):
+    """Instantiate the CachePolicy object for a scheduler spec.  One
+    policy instance arbitrates all tenants of a sim/server run."""
+    from repro.core.policy import CamdnPolicy, StaticQuotaPolicy
+    if not spec.camdn_cache:
+        return TransparentPolicy(spec.name, cache.config.total_bytes,
+                                 mcfg, tparams)
+    if not spec.dynamic_alloc:
+        return StaticQuotaPolicy(cache)
+    return CamdnPolicy(allocator)

@@ -1,5 +1,6 @@
 """Unit + property tests: shared cache, CPT, NEC (paper III-B)."""
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache import CacheConfig, SharedCache

@@ -3,6 +3,7 @@ traffic must reproduce the mapper's ANALYTIC DRAM model — the strongest
 internal-consistency check in the repo (two independent implementations
 of the same contract)."""
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache import CacheConfig, SharedCache

@@ -14,6 +14,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(ROOT, "src")
 
 
+@pytest.mark.slow
 def test_train_loop_improves_and_resumes(tmp_path):
     """launch/train.py path: loss descends; killing and resuming from the
     checkpoint continues from the same step with identical data."""

@@ -57,8 +57,10 @@ def test_budget_monotone_tiles():
 
 
 # ---------------------------------------------------------- attention --
-@pytest.mark.parametrize("S,H,Hkv,hd", [(64, 4, 4, 32), (128, 8, 2, 64),
-                                        (96, 6, 3, 32)])
+@pytest.mark.parametrize("S,H,Hkv,hd", [
+    (64, 4, 4, 32),
+    pytest.param(128, 8, 2, 64, marks=pytest.mark.slow),
+    pytest.param(96, 6, 3, 32, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("causal", [True, False])
 def test_flash_attention_gqa(S, H, Hkv, hd, causal):
     B = 2
@@ -71,6 +73,7 @@ def test_flash_attention_gqa(S, H, Hkv, hd, causal):
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_flash_attention_bf16():
     B, H, S, hd = 1, 2, 64, 32
     q = jax.random.normal(KEY, (B, H, S, hd), jnp.bfloat16)
@@ -99,8 +102,10 @@ def test_block_fused_ffn(S, d, f, bs, bf):
 
 
 # ----------------------------------------------------------------- ssd --
-@pytest.mark.parametrize("S,P,N,chunk", [(64, 16, 8, 16), (128, 32, 16, 32),
-                                         (64, 64, 128, 64)])
+@pytest.mark.parametrize("S,P,N,chunk", [
+    (64, 16, 8, 16),
+    pytest.param(128, 32, 16, 32, marks=pytest.mark.slow),
+    pytest.param(64, 64, 128, 64, marks=pytest.mark.slow)])
 def test_ssd_chunk(S, P, N, chunk):
     BH = 4
     x = jax.random.normal(KEY, (BH, S, P), jnp.float32)
@@ -114,6 +119,7 @@ def test_ssd_chunk(S, P, N, chunk):
     np.testing.assert_allclose(np.asarray(st), np.asarray(sr), rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_ssd_kernel_matches_model_ssd():
     """The Pallas intra-chunk output equals models.ssm.ssd's y_diag+states
     composition when the initial state is zero and decays combine."""

@@ -1,5 +1,6 @@
 """Mapper + MCT + LBM tests (paper III-C)."""
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lbm import LbmConfig, build_model_mapping, segment_blocks

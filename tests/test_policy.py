@@ -1,0 +1,222 @@
+"""CachePolicy conformance suite: every scheduler policy — transparent
+baselines and CaMDN variants — drives the same TenantTask state machine
+and must uphold the same page-accounting invariants:
+
+  * page conservation: free + held == pool size at every step
+  * no tenant exceeds its quota (static split) or the pool (dynamic)
+  * all pages reclaimed on tenant departure
+  * NEC traffic counters are non-negative and monotone
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core.allocator import DynamicCacheAllocator
+from repro.core.cache import CacheConfig, SharedCache
+from repro.core.mapping import MapperConfig
+from repro.core.nec import Nec, NecError, Traffic, TrafficLedger
+from repro.core.policy import CachePolicy, CamdnPolicy, StaticQuotaPolicy
+from repro.core.runtime import TenantModel, TenantTask
+from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph
+from repro.sim.driver import (MultiTenantSim, PoissonArrivals, SimConfig,
+                              TenantSpec)
+from repro.sim.schedulers import SCHEDULERS, make_policy, transparent_plan
+
+POLICIES = ["baseline", "moca", "aurora", "camdn_hw", "camdn"]
+
+
+def _graph(nlayers=4, m=256, k=512, n=512):
+    layers = [LayerSpec(f"l{i}", LayerKind.GEMM,
+                        (GemmDims(m, n, k),),
+                        input_bytes=m * k, output_bytes=m * n,
+                        weight_bytes=k * n) for i in range(nlayers)]
+    return ModelGraph("conf", layers, qos_ms=10.0)
+
+
+def _stack(name):
+    cache = SharedCache(CacheConfig())
+    nec = Nec(cache)
+    alloc = DynamicCacheAllocator(cache)
+    policy = make_policy(SCHEDULERS[name], cache, alloc, MapperConfig())
+    return cache, nec, alloc, policy
+
+
+def _traffic_tuple(t: Traffic):
+    return dataclasses.astuple(t)
+
+
+def _run_one_layer(cache, task, now):
+    task.begin_layer(now)
+    granted = cache.alloc(task.id, task.pages_to_request())
+    while granted is None:
+        task.on_timeout(now)
+        granted = cache.alloc(task.id, task.pages_to_request())
+    plan = task.start_execution(now, granted)
+    task.end_layer(now)
+    return plan
+
+
+# ------------------------------------------------------- conformance --
+@pytest.mark.parametrize("name", POLICIES)
+def test_policy_page_invariants(name):
+    """Interleaved execution of three tenants under each policy keeps
+    pages conserved and NEC counters monotone, and completes."""
+    cache, nec, alloc, policy = _stack(name)
+    tm = TenantModel(_graph())
+    tasks = [TenantTask(f"t{i}", tm, cache, nec, policy) for i in range(3)]
+    total = cache.config.num_pages
+    now, prev = 0.0, _traffic_tuple(nec.traffic)
+    for round_ in range(tm.num_layers):
+        for t in tasks:
+            if t.done:
+                continue
+            plan = _run_one_layer(cache, t, now)
+            now += max(plan.compute_s, 1e-7)
+            held = sum(cache.allocated_pages(x.id) for x in tasks)
+            assert cache.free_pages + held == total
+            cur = _traffic_tuple(nec.traffic)
+            assert all(c >= p for c, p in zip(cur, prev)), "counters regressed"
+            assert all(c >= 0 for c in cur)
+            prev = cur
+    assert all(t.done for t in tasks)
+    assert sum(cache.allocated_pages(t.id) for t in tasks) == 0
+
+
+def test_static_quota_never_exceeded():
+    """camdn_hw: an equal static split — no tenant's grant exceeds the
+    per-tenant quota at any point."""
+    cache, nec, alloc, policy = _stack("camdn_hw")
+    tm = TenantModel(_graph())
+    tasks = [TenantTask(f"t{i}", tm, cache, nec, policy) for i in range(4)]
+    assert policy.quota == cache.config.num_pages // 4
+    now = 0.0
+    for _ in range(tm.num_layers):
+        for t in tasks:
+            if t.done:
+                continue
+            plan = _run_one_layer(cache, t, now)
+            now += max(plan.compute_s, 1e-7)
+            assert cache.allocated_pages(t.id) <= policy.quota
+    assert all(t.done for t in tasks)
+
+
+@pytest.mark.parametrize("name", POLICIES)
+def test_departure_reclaims_everything(name):
+    """A tenant departing mid-block leaves no pages, no residency, and
+    no allocator state behind; survivors still finish."""
+    cache, nec, alloc, policy = _stack(name)
+    tm = TenantModel(_graph())
+    tasks = [TenantTask(f"t{i}", tm, cache, nec, policy) for i in range(3)]
+    now = 0.0
+    for t in tasks:   # one layer each so everyone holds some state
+        plan = _run_one_layer(cache, t, now)
+        now += max(plan.compute_s, 1e-7)
+    leaver = tasks[0]
+    leaver.begin_layer(now)  # mid-layer state, possibly mid-LBM-block
+    g = cache.alloc(leaver.id, leaver.pages_to_request())
+    if g:
+        leaver.start_execution(now, g)
+    leaver.depart()
+    assert cache.allocated_pages(leaver.id) == 0
+    assert nec.resident_lines(leaver.id) == 0
+    assert leaver.id not in alloc.profiles
+    for t in tasks[1:]:
+        while not t.done:
+            plan = _run_one_layer(cache, t, now)
+            now += max(plan.compute_s, 1e-7)
+    held = sum(cache.allocated_pages(t.id) for t in tasks)
+    assert cache.free_pages + held == cache.config.num_pages
+
+
+# ------------------------------------------------------ ledger unit --
+def test_ledger_rejects_negative_deltas():
+    led = TrafficLedger()
+    with pytest.raises(NecError):
+        led.charge("t", dram_read=-1)
+    led.charge("t", dram_read=64, hits=1, accesses=1)
+    assert led.total.dram_read == 64
+    assert led.tenant("t").hit_rate == 1.0
+
+
+def test_ledger_drop_tenant_keeps_total():
+    led = TrafficLedger()
+    led.charge("a", dram_read=128)
+    led.charge("b", dram_read=64)
+    dropped = led.drop_tenant("a")
+    assert dropped.dram_read == 128
+    assert "a" not in led.per_tenant
+    assert led.total.dram_read == 192  # history survives departure
+
+
+def test_runtime_uses_no_private_nec_members():
+    import inspect
+    from repro.core import runtime
+    src = inspect.getsource(runtime)
+    assert "nec._" not in src and "_t(" not in src
+
+
+# --------------------------------------------------- plan-cache bug --
+def test_transparent_plan_keyed_on_config_values():
+    g = _graph()
+    p1 = transparent_plan(g, MapperConfig())
+    p2 = transparent_plan(g, MapperConfig(scratchpad_bytes=64 * 2**10))
+    assert p1 is not p2, "plans for different configs must not be shared"
+    assert p1 is transparent_plan(g, MapperConfig()), "same values hit cache"
+
+
+# ------------------------------------------------- dynamic tenancy --
+ARRIVALS = dict(rate_per_s=300.0, n_arrivals=6, n_inferences=3, seed=3)
+
+
+@pytest.mark.parametrize("name", POLICIES)
+def test_arrival_departure_scenario(name):
+    """Open-loop arrivals + departures through the unified runtime:
+    finite latencies, all pages reclaimed, non-negative per-tenant
+    traffic, and every bounded tenant departs."""
+    from repro.sim.workloads import benchmark_models
+    models = benchmark_models()
+    sim = MultiTenantSim([models["RS"]], name,
+                         arrivals=PoissonArrivals(
+                             models=[models["MB"], models["GN"]], **ARRIVALS))
+    res = sim.run(duration_s=0.04)
+    assert res.total_inferences > 0
+    assert all(math.isfinite(l) for t in res.tasks for l in t.latencies)
+    assert sim.cache.free_pages == sim.cache.config.num_pages
+    bounded = [t for t in res.tasks if t.task_id != res.tasks[0].task_id]
+    assert all(t.departed_at is not None for t in bounded)
+    for t in res.tasks:
+        assert all(v >= 0 for v in dataclasses.astuple(t.traffic))
+
+
+def test_camdn_beats_baseline_under_churn():
+    """Acceptance: the arrival-sweep scenario with joins/leaves mid-run
+    yields finite latencies and CaMDN >= baseline throughput."""
+    from repro.sim.workloads import benchmark_models
+    models = benchmark_models()
+
+    def run(sched):
+        sim = MultiTenantSim(
+            [models["RS"], models["BE"]], sched,
+            arrivals=PoissonArrivals(rate_per_s=200.0,
+                                     models=[models["MB"], models["GN"]],
+                                     n_arrivals=8, n_inferences=4, seed=7))
+        return sim.run(duration_s=0.1)
+
+    base, full = run("baseline"), run("camdn")
+    assert all(math.isfinite(l) for t in full.tasks for l in t.latencies)
+    # same offered horizon: CaMDN completes at least as much work
+    assert full.total_inferences >= base.total_inferences
+    assert full.avg_latency <= base.avg_latency
+
+
+def test_per_tenant_qos_targets():
+    """TenantSpec.qos_ms overrides the model default per tenant."""
+    from repro.sim.workloads import benchmark_models
+    models = benchmark_models()
+    specs = [TenantSpec(models["RS"], qos_ms=1e9),   # impossible-to-miss
+             TenantSpec(models["RS"], qos_ms=1e-9)]  # impossible-to-meet
+    sim = MultiTenantSim(scheduler="camdn", tenants=specs)
+    res = sim.run(duration_s=0.03)
+    assert res.tasks[0].sla_rate == 1.0
+    assert res.tasks[1].sla_rate == 0.0

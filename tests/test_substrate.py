@@ -223,6 +223,7 @@ def test_bf16_optimizer_state_converges():
                                atol=5e-2)
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_full_batch():
     from repro.models import model as M
     from repro.models.base import ArchConfig

@@ -3,6 +3,7 @@ runtime state machine (core/runtime) under adversarial schedules."""
 import math
 
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (CacheConfig, DynamicCacheAllocator, GemmDims,
