@@ -2,13 +2,46 @@
 
 Prints ``name,us_per_call,derived`` CSV lines (paper targets inline)
 plus the roofline summary when dry-run reports are present.
+
+``--smoke`` runs the fast perf-path canary used by CI: the analytic
+figures plus a short plan-lowered serving run, so regressions in the
+grant -> Selection -> KernelPlan -> Pallas path fail fast.
 """
 from __future__ import annotations
 
+import pathlib
 import sys
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; add the root so `from benchmarks import ...` resolves
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def smoke() -> None:
+    """Fast perf-path canary (CI benchmark smoke job)."""
+    import time
+
+    from benchmarks import fig3_reuse, table3_area
+    print("name,us_per_call,derived")
+    fig3_reuse.main()
+    table3_area.main()
+    from repro.launch.serve import MultiTenantServer
+    t0 = time.time()
+    srv = MultiTenantServer(["olmoe-1b-7b", "yi-9b"], batch=1, max_len=16,
+                            total_pages=64)
+    out = srv.run(steps=3)
+    wall_us = (time.time() - t0) * 1e6
+    assert out["tokens_per_s"] > 0, "serving produced no tokens"
+    plans = sorted({p.describe() for t in srv.tenants for p in t.plans})
+    assert plans, "no KernelPlans were lowered"
+    print(f"serve_smoke,{wall_us:.0f},{out['tokens_per_s']:.1f} tok/s | "
+          f"plans {plans}")
 
 
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+        return
     from benchmarks import (arrival_sweep, fig2_contention, fig3_reuse,
                             fig7_speedup, fig8_scaling, fig9_qos, table3_area)
     print("name,us_per_call,derived")

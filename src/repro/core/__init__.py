@@ -9,6 +9,8 @@ from repro.core.mapping import MapperConfig, build_mct, map_layer_lwm
 from repro.core.mct import (MCT, CacheMapEntry, LoopTable, MappingCandidate,
                             ModelMapping, Residency)
 from repro.core.nec import Nec, NecError, Traffic, TrafficLedger
+from repro.core.plan import (AttnPlan, FfnPlan, KernelPlan, lower_ffn,
+                             lower_selection)
 from repro.core.policy import (CachePolicy, CamdnPolicy, ExecutionPlan,
                                StaticQuotaPolicy)
 from repro.core.runtime import TenantModel, TenantTask
@@ -22,5 +24,6 @@ __all__ = [
     "Residency", "DynamicCacheAllocator", "Selection", "TaskProfile",
     "ExecutionPlan", "TenantModel", "TenantTask", "GemmDims", "LayerKind",
     "LayerSpec", "ModelGraph", "TrafficLedger", "CachePolicy", "CamdnPolicy",
-    "StaticQuotaPolicy",
+    "StaticQuotaPolicy", "AttnPlan", "FfnPlan", "KernelPlan", "lower_ffn",
+    "lower_selection",
 ]

@@ -30,6 +30,7 @@ class NecOp:
     op: str          # fill | read | write | writeback | bypass_read | bypass_write
     nbytes: int
     vcaddr: int = 0  # for cached ops (line-aligned window start)
+    repeat: int = 1  # aggregated op: issued this many times back-to-back
 
 
 def _tiles(total: int, tile: int) -> List[Tuple[int, int]]:
@@ -44,7 +45,12 @@ def _tiles(total: int, tile: int) -> List[Tuple[int, int]]:
 
 def generate_gemm_program(g: GemmDims, loop: LoopTable, eb: int,
                           panel_vcaddr: int = 0) -> Iterator[NecOp]:
-    """Unrolled command stream for one GEMM under one loop table.
+    """Command stream for one GEMM under one loop table, aggregated at
+    (rep, m-tile) granularity: the inner n-loop is folded into ``repeat``
+    counts on each op, so the program length is O(reps * M/Tm) instead of
+    O(reps * M/Tm * N/Tn) while the NEC's line-accurate counters stay
+    bit-identical to the fully unrolled stream (large-N layers no longer
+    pay one Python call per tile).
 
     Traffic contract (mirrors the mapper's model, core/mapping.py):
       STREAM  : A tiles bypass per (m,n), B tiles bypass per (m,n), C out
@@ -56,6 +62,10 @@ def generate_gemm_program(g: GemmDims, loop: LoopTable, eb: int,
     res = loop.residency
     a_panel_base = panel_vcaddr + (g.b_bytes_one * eb
                                    if res == Residency.BOTH else 0)
+    n_tiles = _tiles(g.N, loop.tn)
+    n_cnt = len(n_tiles)
+    n_full = sum(1 for _, ns in n_tiles if ns == loop.tn)
+    n_rem = n_tiles[-1][1] if n_full < n_cnt else 0
     for rep in range(r):
         if res in (Residency.B_PANEL, Residency.BOTH):
             if rep == 0 or not g.b_reused:
@@ -64,43 +74,56 @@ def generate_gemm_program(g: GemmDims, loop: LoopTable, eb: int,
         for (mo, ms) in _tiles(g.M, loop.tm):
             a_panel_bytes = ms * g.K * eb
             if res in (Residency.A_PANEL, Residency.BOTH):
-                # A row-panel becomes cache-resident for this m-tile
+                # A row-panel becomes cache-resident for this m-tile,
+                # then hits once per n-tile
                 yield NecOp("fill", a_panel_bytes, a_panel_base)
+                yield NecOp("read", a_panel_bytes, a_panel_base,
+                            repeat=n_cnt)
             elif res == Residency.B_PANEL:
                 # with B resident, A streams exactly once (scratchpad
                 # holds the [tm, K] slab across the n loop)
                 yield NecOp("bypass_read", a_panel_bytes)
-            for (no, ns) in _tiles(g.N, loop.tn):
-                if res in (Residency.A_PANEL, Residency.BOTH):
-                    yield NecOp("read", a_panel_bytes, a_panel_base)  # hits
-                elif res == Residency.STREAM:
-                    # A tile reloaded from DRAM for every n-tile
-                    yield NecOp("bypass_read", a_panel_bytes)
-                # B operand
-                if res in (Residency.B_PANEL, Residency.BOTH):
-                    yield NecOp("read", g.K * ns * eb, panel_vcaddr)  # hits
-                else:
-                    yield NecOp("bypass_read", g.K * ns * eb)
-                # C tile out (bypass-write: LWM outputs go to DRAM)
-                yield NecOp("bypass_write", ms * ns * eb)
+            else:  # STREAM: A tile reloaded from DRAM for every n-tile
+                yield NecOp("bypass_read", a_panel_bytes, repeat=n_cnt)
+            # B operand: one full-size op per n-tile + the remainder tile
+            if res in (Residency.B_PANEL, Residency.BOTH):
+                if n_full:
+                    yield NecOp("read", g.K * loop.tn * eb, panel_vcaddr,
+                                repeat=n_full)  # hits
+                if n_rem:
+                    yield NecOp("read", g.K * n_rem * eb, panel_vcaddr)
+            else:
+                if n_full:
+                    yield NecOp("bypass_read", g.K * loop.tn * eb,
+                                repeat=n_full)
+                if n_rem:
+                    yield NecOp("bypass_read", g.K * n_rem * eb)
+            # C tiles out (bypass-write: LWM outputs go to DRAM); the
+            # whole n-row sums exactly to ms * N bytes
+            yield NecOp("bypass_write", ms * g.N * eb)
 
 
 def execute(ops: Iterator[NecOp], nec: Nec, cpt: CachePageTable,
             tenant: str) -> None:
-    """Run a command stream against the NEC (line-accurate accounting)."""
+    """Run a command stream against the NEC (line-accurate accounting).
+    Aggregated ops carry a ``repeat`` count that the NEC charges in one
+    pass (identical counters to issuing the op that many times)."""
     for o in ops:
         if o.op == "fill":
-            nec.fill(tenant, cpt, o.vcaddr, o.nbytes)
+            for _ in range(o.repeat):
+                nec.fill(tenant, cpt, o.vcaddr, o.nbytes)
         elif o.op == "read":
-            nec.read(tenant, cpt, o.vcaddr, o.nbytes)
+            nec.read(tenant, cpt, o.vcaddr, o.nbytes, repeat=o.repeat)
         elif o.op == "write":
-            nec.write(tenant, cpt, o.vcaddr, o.nbytes)
+            for _ in range(o.repeat):
+                nec.write(tenant, cpt, o.vcaddr, o.nbytes)
         elif o.op == "writeback":
-            nec.writeback(tenant, cpt, o.vcaddr, o.nbytes)
+            for _ in range(o.repeat):
+                nec.writeback(tenant, cpt, o.vcaddr, o.nbytes)
         elif o.op == "bypass_read":
-            nec.bypass_read(tenant, o.nbytes)
+            nec.bypass_read(tenant, o.nbytes, repeat=o.repeat)
         elif o.op == "bypass_write":
-            nec.bypass_write(tenant, o.nbytes)
+            nec.bypass_write(tenant, o.nbytes, repeat=o.repeat)
         else:
             raise ValueError(o.op)
 
@@ -120,9 +143,9 @@ def run_candidate(layer: LayerSpec, cand: MappingCandidate,
     try:
         vbase = 0
         for g, loop in zip(layer.gemms, cand.loops):
-            for op in generate_gemm_program(g, loop, layer.elem_bytes,
-                                            panel_vcaddr=vbase):
-                execute(iter([op]), nec, cpt, tenant)
+            execute(generate_gemm_program(g, loop, layer.elem_bytes,
+                                          panel_vcaddr=vbase),
+                    nec, cpt, tenant)
             # next GEMM's panels start after this one's resident bytes
             resident = 0
             if loop.residency in (Residency.B_PANEL, Residency.BOTH):

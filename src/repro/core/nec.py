@@ -168,24 +168,40 @@ class Nec:
                 self.ledger.charge(tenant, cache_read=lb, dram_write=lb)
 
     def read(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int,
-             fill_on_miss: bool = True) -> int:
-        """cache -> NPU.  Returns bytes that missed (and were filled)."""
+             fill_on_miss: bool = True, repeat: int = 1) -> int:
+        """cache -> NPU.  Returns bytes that missed (and were filled).
+
+        ``repeat`` charges the read as if issued ``repeat`` times
+        back-to-back in ONE pass over the line set (the codegen
+        aggregation path): a resident line hits every time; a missing
+        line misses once, is filled, then hits ``repeat - 1`` times.
+        Counters are exactly those of ``repeat`` sequential calls."""
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
         lb = self.config.line_bytes
         res = self._resident.setdefault(tenant, set())
         missed = 0
         for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
             self._check_mapped(cpt, line)
             if line in res:
-                self.ledger.charge(tenant, accesses=1, hits=1,
-                                   cache_read=lb, noc=lb)
+                self.ledger.charge(tenant, accesses=repeat, hits=repeat,
+                                   cache_read=lb * repeat, noc=lb * repeat)
             else:
                 missed += lb
                 if fill_on_miss:
                     res.add(line)
                     self.ledger.charge(tenant, accesses=1, dram_read=lb,
                                        cache_write=lb, cache_read=lb, noc=lb)
+                    if repeat > 1:
+                        self.ledger.charge(
+                            tenant, accesses=repeat - 1, hits=repeat - 1,
+                            cache_read=lb * (repeat - 1),
+                            noc=lb * (repeat - 1))
                 else:
-                    self.ledger.charge(tenant, accesses=1, dram_read=lb, noc=lb)
+                    missed += lb * (repeat - 1)
+                    self.ledger.charge(tenant, accesses=repeat,
+                                       dram_read=lb * repeat,
+                                       noc=lb * repeat)
         return missed
 
     def write(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int) -> None:
@@ -200,14 +216,22 @@ class Nec:
                                cache_write=lb)
 
     # -- advanced semantics ------------------------------------------------
-    def bypass_read(self, tenant: str, nbytes: int) -> None:
-        """memory -> NPU directly; zero cache footprint (non-reusable data)."""
+    def bypass_read(self, tenant: str, nbytes: int, repeat: int = 1) -> None:
+        """memory -> NPU directly; zero cache footprint (non-reusable
+        data).  ``repeat`` aggregates that many identical transfers into
+        one accounting call (exactly ``repeat`` sequential bypasses)."""
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
         lines = (nbytes + self.config.line_bytes - 1) // self.config.line_bytes
-        self.ledger.charge(tenant, accesses=lines, dram_read=nbytes, noc=nbytes)
+        self.ledger.charge(tenant, accesses=lines * repeat,
+                           dram_read=nbytes * repeat, noc=nbytes * repeat)
 
-    def bypass_write(self, tenant: str, nbytes: int) -> None:
+    def bypass_write(self, tenant: str, nbytes: int, repeat: int = 1) -> None:
         """NPU -> memory directly."""
-        self.ledger.charge(tenant, dram_write=nbytes, noc=nbytes)
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
+        self.ledger.charge(tenant, dram_write=nbytes * repeat,
+                           noc=nbytes * repeat)
 
     def multicast_read(self, tenant: str, cpt: CachePageTable, vcaddr: int,
                        nbytes: int, group_size: int) -> int:

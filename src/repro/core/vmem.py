@@ -18,7 +18,7 @@ import dataclasses
 from typing import List, Optional, Tuple
 
 from repro.core.mct import MappingCandidate
-from repro.core.types import ceil_div
+from repro.core.types import align_up, ceil_div
 
 LANE = 128
 PAGE_BYTES = 32 * 2**10
@@ -90,15 +90,55 @@ def candidates_for_matmul(m: int, n: int, k: int, dtype_bytes: int,
     return out
 
 
+def fused_ffn_block_s(seq_block: int, dtype_bytes: int) -> int:
+    """Fused-FFN sequence block: sublane-aligned, capped at two lanes."""
+    sl = sublane(dtype_bytes)
+    return min(2 * LANE, align_up(max(seq_block, sl), sl))
+
+
+def min_fused_block_f(d_ff: int) -> int:
+    """Smallest legal fused-FFN d_ff block: block_fused_ffn requires a
+    divisor of d_ff, and below one lane the MXU utilization collapses —
+    so the largest divisor <= LANE."""
+    for x in range(min(d_ff, LANE), 0, -1):
+        if d_ff % x == 0:
+            return x
+    return d_ff
+
+
+def fused_ffn_vmem_bytes(block_s: int, block_f: int, d_model: int,
+                         dtype_bytes: int) -> int:
+    """VMEM working set of one fused-FFN grid step: x + out tiles,
+    double-buffered weight tiles (wg/wu/wd), the fp32 accumulator, and
+    the two fp32 hidden tiles that never reach HBM (the LBM guarantee).
+    Single source of truth shared by admissibility (below), the serve-
+    side LBM page bill, and the block-size search in core/plan.py."""
+    io = 2 * block_s * d_model * dtype_bytes
+    weights = 2 * 3 * d_model * block_f * dtype_bytes
+    acc = block_s * d_model * 4
+    hidden = 2 * block_s * block_f * 4
+    return io + weights + acc + hidden
+
+
+def fused_ffn_pages(seq_block: int, d_model: int, d_ff: int,
+                    dtype_bytes: int) -> int:
+    """VMEM pages the *smallest legal* fused (LBM) FFN configuration
+    claims.  This is the page bill an LBM candidate must quote on the
+    VMEM substrate: a grant that admits it is guaranteed to admit some
+    fused block shape in core/plan.lower_ffn (same formula, same
+    minimum block)."""
+    bs = fused_ffn_block_s(seq_block, dtype_bytes)
+    bf = min_fused_block_f(d_ff)
+    return ceil_div(fused_ffn_vmem_bytes(bs, bf, d_model, dtype_bytes),
+                    PAGE_BYTES)
+
+
 def fused_ffn_admissible(seq_block: int, d_model: int, d_ff: int,
                          dtype_bytes: int, pages_avail: int) -> bool:
-    """LBM admissibility on TPU: can a fused FFN block keep its
-    intermediate (seq_block x d_ff) activation entirely in VMEM within
-    the granted page budget?"""
-    inter = seq_block * d_ff * dtype_bytes       # hidden activation
-    io = 2 * seq_block * d_model * dtype_bytes   # in + out tiles
-    w_tiles = 2 * 2 * LANE * max(d_model, d_ff) * dtype_bytes  # streamed
-    return inter + io + w_tiles <= pages_avail * PAGE_BYTES
+    """LBM admissibility on TPU: does any legal fused FFN block shape
+    keep its working set within the granted page budget?"""
+    return fused_ffn_pages(seq_block, d_model, d_ff,
+                           dtype_bytes) <= pages_avail
 
 
 def select_tile(cands: List[TileConfig], pages_avail: int) -> TileConfig:
@@ -108,3 +148,24 @@ def select_tile(cands: List[TileConfig], pages_avail: int) -> TileConfig:
     if not fitting:
         return min(cands, key=lambda c: c.pages)
     return max(fitting, key=lambda c: (c.bk, c.bm * c.bn))
+
+
+def lower_matmul_tile(m: int, n: int, k: int, dtype_bytes: int,
+                      pages: int) -> TileConfig:
+    """Enumerate + best-fit select in one step: the single entry point
+    for turning a page grant into a matmul tile (used by both the
+    kernel wrappers in kernels/ops.py and the KernelPlan lowering in
+    core/plan.py — previously duplicated at each call site)."""
+    return select_tile(candidates_for_matmul(m, n, k, dtype_bytes), pages)
+
+
+def lower_selection(sel, pages: int, *, seq_block: int, d_model: int,
+                    d_ff: int, dtype_bytes: int, head_dim: int = 0,
+                    ssm_chunk: int = 0, down_pages: Optional[int] = None):
+    """Lower a granted :class:`~repro.core.allocator.Selection` into a
+    :class:`~repro.core.plan.KernelPlan` (deferred import: plan.py
+    builds on this module's tile machinery)."""
+    from repro.core.plan import lower_selection as _lower
+    return _lower(sel, pages, seq_block=seq_block, d_model=d_model,
+                  d_ff=d_ff, dtype_bytes=dtype_bytes, head_dim=head_dim,
+                  ssm_chunk=ssm_chunk, down_pages=down_pages)

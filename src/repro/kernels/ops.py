@@ -1,6 +1,7 @@
 """jit'd public wrappers for the Pallas kernels: padding to tile
 boundaries, budget-driven tile selection (the CaMDN candidate bridge),
-and the interpret-mode switch (CPU validation vs TPU execution)."""
+KernelPlan dispatch (the grant -> kernel execution link), and the
+interpret-mode switch (CPU validation vs TPU execution)."""
 from __future__ import annotations
 
 import functools
@@ -9,7 +10,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.vmem import TileConfig, candidates_for_matmul, select_tile
+from repro.core.plan import FfnPlan
+from repro.core.vmem import TileConfig, lower_matmul_tile
 from repro.kernels.block_fused_ffn import block_fused_ffn
 from repro.kernels.cache_matmul import cache_matmul
 from repro.kernels.flash_attention import flash_attention
@@ -29,19 +31,51 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("pages", "interpret"))
-def budgeted_matmul(a: jnp.ndarray, b: jnp.ndarray, pages: int = 64,
-                    interpret: bool = INTERPRET) -> jnp.ndarray:
-    """Matmul through the tile candidate selected for a page budget —
-    the serving-path entry point used by launch/serve.py."""
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def planned_matmul(a: jnp.ndarray, b: jnp.ndarray, tile: TileConfig,
+                   interpret: bool = INTERPRET) -> jnp.ndarray:
+    """Matmul through an explicit, already-lowered tile — the KernelPlan
+    dispatch point: the tile comes from the allocator's grant via
+    core/plan.lower_selection, not from local re-enumeration."""
     m, k = a.shape
     _, n = b.shape
-    cands = candidates_for_matmul(m, n, k, a.dtype.itemsize)
-    tile = select_tile(cands, pages)
     ap = _pad_to(_pad_to(a, 0, tile.bm), 1, tile.bk)
     bp = _pad_to(_pad_to(b, 0, tile.bk), 1, tile.bn)
     out = cache_matmul(ap, bp, tile, interpret=interpret)
     return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("pages", "interpret"))
+def budgeted_matmul(a: jnp.ndarray, b: jnp.ndarray, pages: int = 64,
+                    interpret: bool = INTERPRET) -> jnp.ndarray:
+    """Matmul through the tile candidate selected for a page budget."""
+    m, k = a.shape
+    _, n = b.shape
+    tile = lower_matmul_tile(m, n, k, a.dtype.itemsize, pages)
+    return planned_matmul(a, b, tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def planned_ffn(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+                wd: jnp.ndarray, plan: FfnPlan,
+                interpret: bool = INTERPRET) -> jnp.ndarray:
+    """SwiGLU FFN executed the way the plan's candidate prescribes:
+
+      LBM (plan.fused)  -> block_fused_ffn; the hidden activation never
+                           leaves VMEM (zero DRAM for intermediates).
+      LWM (tiled)       -> three cache_matmul launches with the plan's
+                           tiles; the hidden tensors round-trip HBM.
+
+    x: [S, d]; wg/wu: [d, f]; wd: [f, d].
+    """
+    if plan.fused:
+        return fused_ffn(x, wg, wu, wd, block_s=plan.block_s,
+                         block_f=plan.block_f, interpret=interpret)
+    g = planned_matmul(x, wg, plan.up_tile, interpret=interpret)
+    u = planned_matmul(x, wu, plan.up_tile, interpret=interpret)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+         ).astype(x.dtype)
+    return planned_matmul(h, wd, plan.down_tile, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",

@@ -32,13 +32,20 @@ from repro.core.allocator import DynamicCacheAllocator, Selection
 from repro.core.cache import CacheConfig, SharedCache
 from repro.core.mapping import MapperConfig
 from repro.core.nec import Nec
+from repro.core.plan import KernelPlan
 from repro.core.policy import CamdnPolicy
 from repro.core.runtime import TenantModel, TenantTask
 from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph
-from repro.core.vmem import LANE, PAGE_BYTES, VMEM_PAGES
+from repro.core.vmem import (LANE, PAGE_BYTES, VMEM_PAGES, fused_ffn_pages,
+                             lower_selection)
 from repro.models import model as M
 from repro.models.base import ArchConfig, get_arch
 from repro.models.transformer import init_caches
+
+
+def _elem_bytes(cfg: ArchConfig) -> int:
+    """Activation/weight element size for the VMEM working-set math."""
+    return {"bfloat16": 2, "float16": 2, "int8": 1}.get(cfg.dtype, 4)
 
 
 def _ffn_graph(name: str, cfg: ArchConfig, seq_block: int) -> ModelGraph:
@@ -48,7 +55,7 @@ def _ffn_graph(name: str, cfg: ArchConfig, seq_block: int) -> ModelGraph:
     instead of serve.py hand-building them.  ``seq_block`` is padded to
     the 128-lane MXU tile: the Pallas kernels compute on padded tiles,
     so the schedulable VMEM working set is the padded one."""
-    eb = 2 if cfg.dtype == "bfloat16" else 4
+    eb = _elem_bytes(cfg)
     seq_block = max(seq_block, LANE)
     d, f = cfg.d_model, max(cfg.d_ff, cfg.d_model)
     up = LayerSpec(
@@ -82,6 +89,7 @@ class Tenant:
     index: int = 0
     tokens_served: int = 0
     choices: List[str] = dataclasses.field(default_factory=list)
+    plans: List[KernelPlan] = dataclasses.field(default_factory=list)
 
 
 class MultiTenantServer:
@@ -116,20 +124,41 @@ class MultiTenantServer:
             cfg = get_arch(aid).reduced()
             params = M.init_params(cfg, jax.random.PRNGKey(i))
             caches = init_caches(params, cfg, batch, max_len)
-            dec = jax.jit(M.make_decode_step(cfg))
+            # plan is static: each (tenant, plan) pair compiles once and
+            # is cached; the grant decides which kernels the step runs
+            dec = jax.jit(M.make_decode_step(cfg), static_argnames=("plan",))
             tid = f"t{i}:{aid}"
             tm = TenantModel(_ffn_graph(aid, cfg, seq_block=batch),
                              self.mapper)
+            self._align_lbm_to_vmem(tm, cfg)
             task = TenantTask(tid, tm, self.cache, self.nec, self.policy)
             self.tenants.append(Tenant(tid, cfg, params, caches, dec, task))
 
-    def _schedule_block(self, t: Tenant, now: float) -> None:
+    def _align_lbm_to_vmem(self, tm: TenantModel, cfg: ArchConfig) -> None:
+        """Make the LBM candidates quote the *fused kernel's* VMEM
+        working set: on the VMEM substrate a block grant must admit the
+        block_fused_ffn claim, or the lowering would silently demote
+        every granted LBM selection back to tiled LWM kernels.  Quoted
+        for the REAL cfg.d_ff — the dimension the kernel executes with
+        (block_fused_ffn asserts d_ff % block_f == 0)."""
+        eb = _elem_bytes(cfg)
+        need = fused_ffn_pages(max(self.batch, LANE), cfg.d_model,
+                               cfg.d_ff, eb)
+        for mct in tm.mapping.mcts:
+            if mct.lbm is not None and mct.lbm.p_need < need:
+                mct.lbm = dataclasses.replace(mct.lbm, p_need=need)
+
+    def _schedule_block(self, t: Tenant, now: float
+                        ) -> List[Tuple[Selection, int]]:
         """Run the tenant's FFN block through the unified TenantTask
         state machine: select -> (timeout-downgrade)* -> grant -> end,
-        charging traffic through the NEC ledger."""
+        charging traffic through the NEC ledger.  Returns, per layer,
+        the final Selection and the pages actually held at execution —
+        the inputs the KernelPlan lowering consumes."""
         task = t.task
         if task.done:
             task.reset_for_next_inference()
+        sched: List[Tuple[Selection, int]] = []
         while not task.done:
             sel = task.begin_layer(now)
             granted = self.cache.alloc(t.tid, task.pages_to_request())
@@ -146,33 +175,65 @@ class MultiTenantServer:
                 task.selection = sel
                 granted = []
             task.start_execution(now, granted)
+            sched.append((task.selection, task.held_pages))
             t.choices.append(f"{sel.candidate.kind}:{task.held_pages}p")
             task.end_layer(now)
+        return sched
+
+    def _lower_plan(self, t: Tenant,
+                    sched: List[Tuple[Selection, int]]) -> KernelPlan:
+        """Lower the block's granted selections into the KernelPlan the
+        decode step executes.  An LBM grant covers the whole block; LWM
+        layers each lower their own GEMM tile from their own grant.
+        Lowered with the REAL cfg.d_ff — the dimension the kernels
+        execute with — not the padded scheduling-graph one."""
+        cfg = t.cfg
+        lbm = [(s, p) for s, p in sched if s.candidate.kind == "LBM"]
+        sel, pages = lbm[0] if lbm else sched[0]
+        down_pages = None if lbm else (sched[-1][1] if len(sched) > 1
+                                       else None)
+        return lower_selection(
+            sel, pages, seq_block=max(self.batch, LANE),
+            d_model=cfg.d_model, d_ff=cfg.d_ff,
+            dtype_bytes=_elem_bytes(cfg), head_dim=cfg.hd,
+            ssm_chunk=cfg.ssm_chunk, down_pages=down_pages)
 
     def _serve_one(self, t: Tenant, now: float) -> None:
         # --- CaMDN selection for this tenant's layer block ------------
-        self._schedule_block(t, now)
+        sched = self._schedule_block(t, now)
 
-        # --- real decode step -----------------------------------------
+        # --- lower the grant into the executable KernelPlan -----------
+        plan = self._lower_plan(t, sched)
+        t.plans.append(plan)
+        # SSM decode is O(1)-recurrent (no dense FFN): the plan only
+        # affects prefill there, so skip the per-plan decode recompile
+        dec_plan: Optional[KernelPlan] = (
+            plan if t.cfg.family != "ssm" else None)
+
+        # --- real decode step through the plan's kernels --------------
         token = jnp.full((self.batch, 1), t.index % t.cfg.vocab_size,
                          jnp.int32)
         if t.cfg.family == "encdec":
             enc = jnp.zeros((self.batch, t.cfg.enc_len, t.cfg.d_model),
                             t.cfg.jdtype)
             nxt, t.caches = t.decode(t.params, t.caches, token,
-                                     jnp.int32(t.index), enc)
+                                     jnp.int32(t.index), enc,
+                                     plan=dec_plan)
         else:
             nxt, t.caches = t.decode(t.params, t.caches, token,
-                                     jnp.int32(t.index))
+                                     jnp.int32(t.index), plan=dec_plan)
         t.index += 1
         t.tokens_served += self.batch
 
     def _slack(self, t: Tenant, now: float) -> float:
         """Seconds of budget headroom per token (negative = late)."""
+        # most-specific match wins: the longest key matching the tenant
+        # id (a bare arch suffix must not override an exact tenant key)
         target = None
+        best_len = -1
         for k, v in self.qos_targets.items():
-            if t.tid.endswith(k) or k in t.tid:
-                target = v
+            if k in t.tid and len(k) > best_len:
+                target, best_len = v, len(k)
         if target is None:
             return float("inf")
         rate = t.tokens_served / max(now, 1e-6)
@@ -196,6 +257,7 @@ class MultiTenantServer:
             "tenants": {
                 t.tid: {"tokens": t.tokens_served,
                         "choices": t.choices[-4:],
+                        "plans": [p.describe() for p in t.plans[-4:]],
                         "lbm_frac": sum(c.startswith("LBM")
                                         for c in t.choices) / len(t.choices)}
                 for t in self.tenants
@@ -217,7 +279,8 @@ def main() -> None:
     out = srv.run(args.steps)
     for tid, info in out["tenants"].items():
         print(f"[serve] {tid}: {info['tokens']} tokens, "
-              f"LBM {info['lbm_frac'] * 100:.0f}%, recent {info['choices']}")
+              f"LBM {info['lbm_frac'] * 100:.0f}%, recent {info['choices']}, "
+              f"plans {info['plans']}")
     print(f"[serve] {out['tokens_per_s']:.1f} tok/s total, "
           f"{out['dram_bytes'] / 2**20:.1f} MB modeled DRAM")
 

@@ -52,6 +52,7 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
         kv_cache: Optional[Dict[str, jnp.ndarray]] = None,
         cache_index: Optional[jnp.ndarray] = None,
         xattn_kv: Optional[jnp.ndarray] = None,
+        attn_plan: Optional[Any] = None,
         ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """GQA attention.
 
@@ -60,6 +61,8 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
     position -> one-step attention, returns the updated cache.
     Cross-attention: xattn_kv [B, L_enc, d] (keys/values from encoder;
     no cache update, no RoPE on k).
+    ``attn_plan`` (core.plan.AttnPlan) routes causal prefill
+    self-attention through the flash kernel with the plan's block sizes.
     """
     B, S, d = x.shape
     H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
@@ -91,6 +94,16 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
             bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)  # [1, L]
         else:
             new_cache = None
+            if (attn_plan is not None and causal
+                    and cfg.sliding_window == 0):
+                # plan-lowered flash path: block sizes from the grant
+                from repro.kernels import ops as kops
+                ctx = kops.attention(
+                    q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), causal=True,
+                    block_q=attn_plan.block_q, block_kv=attn_plan.block_kv)
+                ctx = ctx.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+                return linear(params["wo"], ctx.astype(x.dtype)), None
             bias = _mask_bias(S, S, causal, cfg.sliding_window)
 
     # grouped heads: fold group dim into einsum

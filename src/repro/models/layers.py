@@ -75,8 +75,19 @@ def init_ffn(key, d_model: int, d_ff: int, dtype) -> Params:
             "down": init_linear(k3, d_ff, d_model, dtype)}
 
 
-def ffn(params: Params, x: jnp.ndarray, dot: DotFn = default_dot) -> jnp.ndarray:
-    return swiglu(params["gate"], params["up"], params["down"], x, dot)
+def ffn(params: Params, x: jnp.ndarray, dot: DotFn = default_dot,
+        plan: Optional[Any] = None) -> jnp.ndarray:
+    """SwiGLU FFN.  With ``plan`` (a core.plan.FfnPlan) the block
+    executes through the Pallas kernels the granted candidate lowered
+    to — fused LBM or tiled LWM — instead of plain einsums."""
+    if plan is None:
+        return swiglu(params["gate"], params["up"], params["down"], x, dot)
+    from repro.kernels import ops as kops  # deferred: keep layers jnp-only
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = kops.planned_ffn(x2, params["gate"]["w"], params["up"]["w"],
+                         params["down"]["w"], plan)
+    return y.reshape(lead + (y.shape[-1],))
 
 
 # ---------------------------------------------------------------- RoPE --

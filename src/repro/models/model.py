@@ -116,18 +116,22 @@ def make_train_step(cfg: ArchConfig, opt_cfg: Optional[adamw.AdamWConfig] = None
 
 
 def make_prefill(cfg: ArchConfig):
-    def prefill(params, batch):
+    def prefill(params, batch, plan=None):
         prefix = batch.get("embeds_prefix")
         logits, _ = lm_forward(params, batch["tokens"], cfg,
-                               embeds_prefix=prefix)
+                               embeds_prefix=prefix, plan=plan)
         return logits[:, -1, :]
     return prefill
 
 
 def make_decode_step(cfg: ArchConfig):
-    def serve_decode(params, caches, token, index, enc_out=None):
+    """One-token serving step.  ``plan`` is a static
+    core.plan.KernelPlan: jit it with ``static_argnames=("plan",)`` so
+    each (tenant, plan) pair compiles once and the allocator's grant
+    decides which Pallas kernel variant the step executes."""
+    def serve_decode(params, caches, token, index, enc_out=None, plan=None):
         logits, caches = decode_step(params, token, caches, index, cfg,
-                                     enc_out=enc_out)
+                                     enc_out=enc_out, plan=plan)
         logits = mask_padded_logits(logits, cfg)
         return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), caches
     return serve_decode

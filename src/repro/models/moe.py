@@ -10,7 +10,7 @@ scatter and the expert einsum.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +38,16 @@ def capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
     return max(4, -(-c // 4) * 4)  # pad to a multiple of 4
 
 
-def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig
+def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+              plan: Optional[Any] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: [G, T, d] -> (y: [G, T, d], aux_loss scalar).
 
     Per group: route, rank tokens within each expert by sort, drop
     overflow beyond capacity C, scatter to [E*C, d], run experts,
-    gather-combine with router weights.
+    gather-combine with router weights.  With ``plan`` (a
+    core.plan.FfnPlan) each expert's SwiGLU runs through the
+    plan-lowered Pallas kernels instead of the batched einsums.
     """
     G, T, d = x.shape
     E, K = cfg.num_experts, cfg.experts_per_token
@@ -81,13 +84,23 @@ def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig
     # a token all-to-all (G on data, E on model) instead of GSPMD
     # falling back to full-buffer all-reduces
     buf = shard_hint(buf, ("data", "model", None, None))
-    h_g = jnp.einsum("gecd,edf->gecf", buf, params["gate"],
-                     preferred_element_type=jnp.float32)
-    h_u = jnp.einsum("gecd,edf->gecf", buf, params["up"],
-                     preferred_element_type=jnp.float32)
-    h = (jax.nn.silu(h_g) * h_u).astype(x.dtype)
-    out = jnp.einsum("gecf,efd->gecd", h, params["down"],
-                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if plan is not None:
+        # KernelPlan path: run each expert's SwiGLU through the
+        # plan-lowered Pallas kernels (fused LBM or tiled LWM)
+        from repro.kernels import ops as kops
+        bufe = buf.transpose(1, 0, 2, 3).reshape(E, G * C, d)
+        oute = jax.lax.map(
+            lambda a: kops.planned_ffn(a[0], a[1], a[2], a[3], plan),
+            (bufe, params["gate"], params["up"], params["down"]))
+        out = oute.reshape(E, G, C, d).transpose(1, 0, 2, 3)
+    else:
+        h_g = jnp.einsum("gecd,edf->gecf", buf, params["gate"],
+                         preferred_element_type=jnp.float32)
+        h_u = jnp.einsum("gecd,edf->gecf", buf, params["up"],
+                         preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(h_g) * h_u).astype(x.dtype)
+        out = jnp.einsum("gecf,efd->gecd", h, params["down"],
+                         preferred_element_type=jnp.float32).astype(x.dtype)
     out = shard_hint(out, ("data", "model", None, None))
 
     def combine_group(out_g, order_g, slot_g, keep_g, tok_g, pg):

@@ -123,10 +123,18 @@ def ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
 
 
 def mamba2_forward(params: Params, x: jnp.ndarray, cfg: ArchConfig,
-                   state: Optional[Dict[str, jnp.ndarray]] = None
+                   state: Optional[Dict[str, jnp.ndarray]] = None,
+                   chunk: Optional[int] = None
                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """Full Mamba2 block over a sequence.  x: [b, s, d]."""
+    """Full Mamba2 block over a sequence.  x: [b, s, d].
+
+    ``chunk`` overrides the architecture's SSD chunk (the KernelPlan
+    path: a smaller page grant lowers to a smaller intra-chunk working
+    set); it applies only when it divides the sequence length."""
     b, s, d = x.shape
+    ssd_chunk_len = cfg.ssm_chunk
+    if chunk and chunk > 0 and s % chunk == 0:
+        ssd_chunk_len = chunk
     di, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     zxbcdt = linear(params["in_proj"], x)
     z, xs, B, C, dt = jnp.split(
@@ -145,7 +153,7 @@ def mamba2_forward(params: Params, x: jnp.ndarray, cfg: ArchConfig,
     xh = shard_hint(xh, ("data", None, "model", None))
     dt = shard_hint(dt, ("data", None, "model"))
     h0 = state["ssm"] if state else None
-    y, hfin = ssd(xh, dt, A, B, C, params["D"], cfg.ssm_chunk, h0)
+    y, hfin = ssd(xh, dt, A, B, C, params["D"], ssd_chunk_len, h0)
     y = y.reshape(b, s, di)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     out = linear(params["out_proj"], y)

@@ -113,10 +113,12 @@ def init_lm(key, cfg: ArchConfig) -> Params:
 
 # ------------------------------------------------------------- blocks --
 def _dense_block(p: Params, x, cfg: ArchConfig, *, causal=True, kv_cache=None,
-                 cache_index=None, positions=None, xattn_kv=None, xp=None):
+                 cache_index=None, positions=None, xattn_kv=None, xp=None,
+                 plan=None):
     h, new_cache = mha(p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps), cfg,
                        causal=causal, kv_cache=kv_cache,
-                       cache_index=cache_index, positions=positions)
+                       cache_index=cache_index, positions=positions,
+                       attn_plan=plan.attn if plan is not None else None)
     x = x + h
     aux = 0.0
     if xp is not None:  # cross-attention (enc-dec decoder)
@@ -124,19 +126,23 @@ def _dense_block(p: Params, x, cfg: ArchConfig, *, causal=True, kv_cache=None,
                     causal=False, xattn_kv=xattn_kv)
         x = x + hx
     y = rms_norm(p["ln2"], x, cfg.norm_eps)
+    ffn_plan = plan.ffn if plan is not None else None
     if cfg.is_moe:
-        out, aux = moe_apply(p["mlp"], y, cfg)
+        out, aux = moe_apply(p["mlp"], y, cfg, plan=ffn_plan)
     else:
-        out = ffn(p["mlp"], y)
+        out = ffn(p["mlp"], y, plan=ffn_plan)
     return x + out, new_cache, aux
 
 
-def _ssm_block(p: Params, x, cfg: ArchConfig, state=None, decode=False):
+def _ssm_block(p: Params, x, cfg: ArchConfig, state=None, decode=False,
+               plan=None):
     y = rms_norm(p["ln1"], x, cfg.norm_eps)
     if decode:
         out, new_state = ssd_decode_step(p["mamba"], y, cfg, state)
     else:
-        out, new_state = mamba2_forward(p["mamba"], y, cfg, state)
+        chunk = plan.ssm_chunk if plan is not None else None
+        out, new_state = mamba2_forward(p["mamba"], y, cfg, state,
+                                        chunk=chunk)
     return x + out, new_state
 
 
@@ -144,12 +150,15 @@ def _ssm_block(p: Params, x, cfg: ArchConfig, state=None, decode=False):
 def lm_forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig, *,
                embeds_prefix: Optional[jnp.ndarray] = None,
                remat: bool = False,
+               plan=None,
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Training / prefill forward.  tokens: [B, S] -> logits [B, S, V].
 
     ``embeds_prefix`` [B, P, d] (VLM patches / audio frames) is
     prepended to the token embeddings; logits cover the full sequence.
-    Returns (logits, moe_aux_loss).
+    ``plan`` (a static core.plan.KernelPlan) executes FFN/attention/SSD
+    through the plan-lowered Pallas kernels.  Returns (logits,
+    moe_aux_loss).
     """
     x = embed(params["embed"], tokens)
     if embeds_prefix is not None:
@@ -169,22 +178,23 @@ def lm_forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig, *,
         x, aux = carry
         if cfg.family == "hybrid":
             def ssm_step(xc, sp):
-                y, _ = _ssm_block(sp, xc, cfg)
+                y, _ = _ssm_block(sp, xc, cfg, plan=plan)
                 return y, None
             x, _ = jax.lax.scan(ssm_step, x, gp["ssm"],
                                 unroll=max(1, cfg.attn_every - 1))
             x, _, a = _dense_block(params["shared_attn"], x, cfg,
-                                   positions=positions)
+                                   positions=positions, plan=plan)
             aux = aux + a
         elif cfg.family == "ssm":
-            x, _ = _ssm_block(gp, x, cfg)
+            x, _ = _ssm_block(gp, x, cfg, plan=plan)
         elif cfg.family == "encdec":
             lp, xp = gp
             x, _, a = _dense_block(lp, x, cfg, positions=positions,
-                                   xattn_kv=enc_out, xp=xp)
+                                   xattn_kv=enc_out, xp=xp, plan=plan)
             aux = aux + a
         else:
-            x, _, a = _dense_block(gp, x, cfg, positions=positions)
+            x, _, a = _dense_block(gp, x, cfg, positions=positions,
+                                   plan=plan)
             aux = aux + a
         x = shard_hint(x, ("data", None, None))
         return (x, aux), None
@@ -236,9 +246,11 @@ def init_caches(params: Params, cfg: ArchConfig, batch: int, max_len: int):
 
 
 def decode_step(params: Params, token: jnp.ndarray, caches, index: jnp.ndarray,
-                cfg: ArchConfig, enc_out: Optional[jnp.ndarray] = None
-                ) -> Tuple[jnp.ndarray, Any]:
+                cfg: ArchConfig, enc_out: Optional[jnp.ndarray] = None,
+                plan=None) -> Tuple[jnp.ndarray, Any]:
     """One decode step.  token: [B, 1] int32; index: scalar position.
+    ``plan`` (a static core.plan.KernelPlan) executes each layer's FFN
+    through the Pallas kernel variant the granted candidate lowered to.
     Returns (logits [B, 1, V], updated caches)."""
     x = embed(params["embed"], token)
     positions = jnp.full((1, 1), index, jnp.int32)
@@ -258,14 +270,15 @@ def decode_step(params: Params, token: jnp.ndarray, caches, index: jnp.ndarray,
                                       unroll=max(1, cfg.attn_every - 1))
             x, new_kv, _ = _dense_block(params["shared_attn"], x, cfg,
                                         kv_cache=cache["attn"],
-                                        cache_index=index, positions=positions)
+                                        cache_index=index, positions=positions,
+                                        plan=plan)
             return x, {"ssm": new_ssm, "attn": new_kv}
         if cfg.family == "ssm":
             x, new_state = _ssm_block(gp, x, cfg, state=cache, decode=True)
             return x, new_state
         x, new_kv, _ = _dense_block(gp, x, cfg, kv_cache=cache,
                                     cache_index=index, positions=positions,
-                                    xattn_kv=enc_out, xp=xp)
+                                    xattn_kv=enc_out, xp=xp, plan=plan)
         return x, new_kv
 
     layer_stack = params["layers"] if cfg.family != "encdec" else (

@@ -103,6 +103,23 @@ def test_host_mesh_axes():
     assert m.devices.size == 1
 
 
+def test_qos_target_most_specific_match_wins():
+    """Regression: _slack used to keep the LAST matching qos_targets key;
+    a generic suffix listed after an exact tenant key silently overrode
+    it.  The most-specific (longest) matching key must win regardless of
+    dict order."""
+    from repro.launch.serve import MultiTenantServer
+    srv = MultiTenantServer(["olmoe-1b-7b"], batch=1, max_len=8,
+                            total_pages=16,
+                            qos_targets={"olmoe-1b-7b": 1e-6,  # impossible
+                                         "1b-7b": 100.0})      # trivial
+    t = srv.tenants[0]
+    t.tokens_served = 100
+    # under the exact key (1e-6 s/token) the tenant is hopelessly late;
+    # the generic "1b-7b" target would report positive slack instead
+    assert srv._slack(t, now=1.0) < 0
+
+
 def test_qos_priority_scheduling():
     """Deadline-aware serving: the tightest-QoS tenant is ordered first."""
     from repro.launch.serve import MultiTenantServer
