@@ -2,10 +2,15 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.sim.driver import MultiTenantSim, SimConfig, SimResult
 from repro.sim.workloads import benchmark_models
+
+# every emit() lands here so the harness can dump a machine-readable
+# BENCH_nec.json next to the human-readable CSV (perf trajectory,
+# CI regression gate) — see benchmarks/run.py
+RESULTS: Dict[str, Dict] = {}
 
 
 def mixed_tenants(n: int) -> list:
@@ -40,5 +45,8 @@ def timed(fn: Callable) -> Tuple[float, object]:
     return (time.time() - t0) * 1e6, out
 
 
-def emit(name: str, us: float, derived: str) -> None:
+def emit(name: str, us: float, derived: str,
+         extra: Optional[Dict] = None) -> None:
+    RESULTS[name] = {"us_per_call": round(us, 1), "derived": derived,
+                     **(extra or {})}
     print(f"{name},{us:.0f},{derived}", flush=True)

@@ -112,19 +112,28 @@ class SharedCache:
             raise ValueError("negative page count")
         if n_pages > len(self._free):
             return None
-        got = [self._free.pop() for _ in range(n_pages)]
+        if n_pages == 0:
+            return []
+        got = self._free[-n_pages:]
+        del self._free[-n_pages:]
+        owner = self._owner
         for p in got:
-            self._owner[p] = tenant
+            owner[p] = tenant
         self._pages_of.setdefault(tenant, set()).update(got)
         return got
 
     def free(self, tenant: str, pages: Optional[List[int]] = None) -> int:
-        """Release ``pages`` (or all pages) owned by ``tenant``."""
+        """Release ``pages`` (or all pages) owned by ``tenant``.
+        Validates the whole (deduplicated) request before mutating any
+        state, so a bad page id leaves the pool untouched."""
         owned = self._pages_of.get(tenant, set())
-        to_free = set(owned) if pages is None else set(pages)
-        bad = to_free - owned
-        if bad:
-            raise KeyError(f"tenant {tenant} does not own pages {sorted(bad)}")
+        if pages is None:
+            to_free = list(owned)
+        else:
+            to_free = list(dict.fromkeys(pages))   # dedup, order kept
+            bad = [p for p in to_free if p not in owned]
+            if bad:
+                raise KeyError(f"tenant {tenant} does not own pages {sorted(bad)}")
         for p in to_free:
             owned.discard(p)
             del self._owner[p]

@@ -106,20 +106,20 @@ def generate_gemm_program(g: GemmDims, loop: LoopTable, eb: int,
 def execute(ops: Iterator[NecOp], nec: Nec, cpt: CachePageTable,
             tenant: str) -> None:
     """Run a command stream against the NEC (line-accurate accounting).
-    Aggregated ops carry a ``repeat`` count that the NEC charges in one
-    pass (identical counters to issuing the op that many times)."""
+    Every op — including its ``repeat`` count — is dispatched as ONE
+    whole-window NEC call: the NEC folds repeats in arithmetically
+    (fill is idempotent on resident lines; read/write/writeback carry a
+    ``repeat`` argument), so counters are identical to issuing the op
+    that many times while the Python-level cost stays O(#ops)."""
     for o in ops:
         if o.op == "fill":
-            for _ in range(o.repeat):
-                nec.fill(tenant, cpt, o.vcaddr, o.nbytes)
+            nec.fill(tenant, cpt, o.vcaddr, o.nbytes, repeat=o.repeat)
         elif o.op == "read":
             nec.read(tenant, cpt, o.vcaddr, o.nbytes, repeat=o.repeat)
         elif o.op == "write":
-            for _ in range(o.repeat):
-                nec.write(tenant, cpt, o.vcaddr, o.nbytes)
+            nec.write(tenant, cpt, o.vcaddr, o.nbytes, repeat=o.repeat)
         elif o.op == "writeback":
-            for _ in range(o.repeat):
-                nec.writeback(tenant, cpt, o.vcaddr, o.nbytes)
+            nec.writeback(tenant, cpt, o.vcaddr, o.nbytes, repeat=o.repeat)
         elif o.op == "bypass_read":
             nec.bypass_read(tenant, o.nbytes, repeat=o.repeat)
         elif o.op == "bypass_write":
@@ -132,7 +132,9 @@ def run_candidate(layer: LayerSpec, cand: MappingCandidate,
                   cache: SharedCache, nec: Nec, tenant: str) -> int:
     """Allocate the candidate's pages, install the CPT, execute the
     unrolled program for every GEMM, release.  Returns DRAM bytes moved
-    (from the NEC's line-accurate counters)."""
+    (from the NEC's line-accurate counters).  The tenant's residency
+    bitmap comes from the NEC's arena, so sweeping many candidates
+    through one :class:`Nec` reuses a single allocation across GEMMs."""
     before = nec.per_tenant.get(tenant)
     before_total = before.dram_total if before else 0
     pages = cache.alloc(tenant, cand.p_need)

@@ -59,9 +59,16 @@ def _pages(nbytes: int, page_bytes: int) -> int:
     return ceil_div(nbytes, page_bytes) if nbytes > 0 else 0
 
 
+_FACTOR_CACHE: Dict[Tuple[int, int, int], List[int]] = {}
+
+
 def _aligned_factors(dim: int, align: int, cap: int) -> List[int]:
     """Heuristic rule: tile factors are multiples of the PE edge, capped,
     deduplicated, always including the full dim if it fits the cap."""
+    key = (dim, align, cap)
+    hit = _FACTOR_CACHE.get(key)
+    if hit is not None:
+        return hit
     out = set()
     t = align
     while t < min(dim, cap):
@@ -69,7 +76,8 @@ def _aligned_factors(dim: int, align: int, cap: int) -> List[int]:
         t *= 2
     out.add(min(align_up(dim, align), align_up(cap, align)) if dim > cap
             else align_up(dim, align))
-    return sorted(x for x in out if x >= 1)
+    res = _FACTOR_CACHE[key] = sorted(out)
+    return res
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,19 +90,38 @@ class _GemmPlan:
     flops: int
 
 
+# Exact-solver results are pure functions of (gemm, elem size, budget,
+# config) — all hashable frozen dataclasses — and the same subspaces are
+# re-solved constantly (every sim rebuilds every tenant's MCTs; MCT
+# builds across tenants repeat identical layers), so both solver entry
+# points are memoized process-wide.  Values are frozen plans/candidates,
+# shared read-only by every caller.
+_GEMM_PLAN_CACHE: Dict[Tuple[GemmDims, int, int, MapperConfig],
+                       Optional["_GemmPlan"]] = {}
+_LWM_CACHE: Dict[Tuple[LayerSpec, int, MapperConfig], MappingCandidate] = {}
+
+
 def _plan_gemm(g: GemmDims, eb: int, budget: int, cfg: MapperConfig) -> Optional[_GemmPlan]:
     """Solve one GEMM's disjoint subspaces under ``budget`` bytes of
     shared cache; returns the min-DRAM plan or None if even STREAM fails
-    (cannot happen: STREAM needs zero cache)."""
+    (cannot happen: STREAM needs zero cache).  Memoized on
+    ``(g, eb, budget, cfg)``."""
+    key = (g, eb, budget, cfg)
+    if key in _GEMM_PLAN_CACHE:
+        return _GEMM_PLAN_CACHE[key]
     sp = cfg.scratchpad_bytes // 2   # double buffering halves usable space
     pe = cfg.pe_dim
     r = g.reps
-    best: Optional[_GemmPlan] = None
+    # enumerate with plain tuples — frozen-dataclass construction per
+    # candidate dominates solve time otherwise; the single winning plan
+    # is materialized once at the end
+    best: Optional[Tuple] = None   # (dram, resident, order, tm, tn, tk,
+    #                                residency, stream_a, stream_b)
 
-    def consider(p: _GemmPlan):
+    def consider(dram, resident, order, tm, tn, tk, res, sa, sb):
         nonlocal best
-        if best is None or (p.dram_bytes, p.resident_bytes) < (best.dram_bytes, best.resident_bytes):
-            best = p
+        if best is None or (dram, resident) < (best[0], best[1]):
+            best = (dram, resident, order, tm, tn, tk, res, sa, sb)
 
     tks = _aligned_factors(g.K, pe, 4 * pe)
     # --- subspace STREAM: zero cache pages, scratchpad tiles only -------
@@ -110,9 +137,8 @@ def _plan_gemm(g: GemmDims, eb: int, budget: int, cfg: MapperConfig) -> Optional
             a = r * g.a_bytes_one * ceil_div(g.N, tn)
             b = r * g.b_bytes_one * ceil_div(g.M, tm)
             c = r * g.c_bytes_one
-            consider(_GemmPlan(
-                LoopTable(("m", "n", "k"), tm, tn, tk, Residency.STREAM),
-                (a + b + c) * eb, 0, True, True, g.flops))
+            consider((a + b + c) * eb, 0, ("m", "n", "k"), tm, tn, tk,
+                     Residency.STREAM, True, True)
 
     if budget > 0:
         # --- subspace A_PANEL: Tm x K panel cache-resident ---------------
@@ -128,9 +154,8 @@ def _plan_gemm(g: GemmDims, eb: int, budget: int, cfg: MapperConfig) -> Optional
             a = r * g.a_bytes_one
             b = r * g.b_bytes_one * ceil_div(g.M, tm)
             c = r * g.c_bytes_one
-            consider(_GemmPlan(
-                LoopTable(("m", "n", "k"), tm, tn, tk, Residency.A_PANEL),
-                (a + b + c) * eb, panel, False, True, g.flops))
+            consider((a + b + c) * eb, panel, ("m", "n", "k"), tm, tn, tk,
+                     Residency.A_PANEL, False, True)
 
         # --- subspace B_PANEL: whole B (weights) cache-resident ----------
         bbytes = g.b_bytes_one * eb
@@ -142,34 +167,45 @@ def _plan_gemm(g: GemmDims, eb: int, budget: int, cfg: MapperConfig) -> Optional
             b = g.b_bytes_one * (1 if g.b_reused else r)
             a = r * g.a_bytes_one
             c = r * g.c_bytes_one
-            consider(_GemmPlan(
-                LoopTable(("n", "m", "k"), tm, tn, tk, Residency.B_PANEL),
-                (a + b + c) * eb, bbytes, True, False, g.flops))
+            consider((a + b + c) * eb, bbytes, ("n", "m", "k"), tm, tn, tk,
+                     Residency.B_PANEL, True, False)
 
             # --- subspace BOTH: B + A-panel resident ----------------------
-            for tm in _aligned_factors(g.M, pe, 64 * pe):
-                panel = tm * g.K * eb
+            for tm2 in _aligned_factors(g.M, pe, 64 * pe):
+                panel = tm2 * g.K * eb
                 if bbytes + panel > budget:
                     continue
-                consider(_GemmPlan(
-                    LoopTable(("n", "m", "k"), tm, tn, tk, Residency.BOTH),
-                    (a + b + c) * eb, bbytes + panel, False, False, g.flops))
+                consider((a + b + c) * eb, bbytes + panel, ("n", "m", "k"),
+                         tm2, tn, tk, Residency.BOTH, False, False)
                 break  # first (smallest) feasible panel suffices: traffic equal
 
-    return best
+    plan = None
+    if best is not None:
+        dram, resident, order, tm, tn, tk, res, sa, sb = best
+        plan = _GemmPlan(LoopTable(order, tm, tn, tk, res),
+                         dram, resident, sa, sb, g.flops)
+    _GEMM_PLAN_CACHE[key] = plan
+    return plan
 
 
 def map_layer_lwm(layer: LayerSpec, budget: int, cfg: MapperConfig) -> MappingCandidate:
-    """One LWM candidate for ``layer`` under ``budget`` bytes of cache."""
+    """One LWM candidate for ``layer`` under ``budget`` bytes of cache.
+    Memoized on ``(layer, budget, cfg)``; the returned candidate is
+    frozen and shared by every caller."""
+    key = (layer, budget, cfg)
+    if key in _LWM_CACHE:
+        return _LWM_CACHE[key]
     eb = layer.elem_bytes
     if layer.kind == LayerKind.ELEMENTWISE or not layer.gemms:
         dram = layer.input_bytes + layer.output_bytes
-        return MappingCandidate(
+        m = MappingCandidate(
             kind="LWM", p_need=0, dram_bytes=dram, flops=layer.flops,
             loops=(), cache_map=(
                 CacheMapEntry("in", 0, 0, bypass=True),
                 CacheMapEntry("out", 0, 0, bypass=True)),
             usage_limit_bytes=budget)
+        _LWM_CACHE[key] = m
+        return m
 
     plans: List[_GemmPlan] = []
     # split the budget greedily: biggest-B GEMM first claims residency
@@ -197,10 +233,12 @@ def map_layer_lwm(layer: LayerSpec, budget: int, cfg: MapperConfig) -> MappingCa
             cmap.append(CacheMapEntry(f"g{i}.A", 0, 0, bypass=True))
         if p.stream_b:
             cmap.append(CacheMapEntry(f"g{i}.B", 0, 0, bypass=True))
-    return MappingCandidate(
+    m = MappingCandidate(
         kind="LWM", p_need=pages, dram_bytes=dram, flops=layer.flops,
         loops=tuple(p.loop for p in plans), cache_map=tuple(cmap),
         usage_limit_bytes=budget)
+    _LWM_CACHE[key] = m
+    return m
 
 
 def build_mct(layer: LayerSpec, cfg: MapperConfig,

@@ -110,11 +110,21 @@ class ModelMapping:
     mcts: List[MCT]
     blocks: List[Tuple[int, int]]  # [start, end) layer index ranges
 
-    def block_of(self, layer_idx: int) -> Tuple[int, int]:
+    def __post_init__(self):
+        # layer -> block index and block-head set, precomputed: both are
+        # queried on every layer selection of every inference
+        self._block_of: Dict[int, Tuple[int, int]] = {}
+        self._heads = set()
         for b in self.blocks:
-            if b[0] <= layer_idx < b[1]:
-                return b
-        raise IndexError(f"layer {layer_idx} not covered by any block")
+            self._heads.add(b[0])
+            for i in range(b[0], b[1]):
+                self._block_of[i] = b
+
+    def block_of(self, layer_idx: int) -> Tuple[int, int]:
+        b = self._block_of.get(layer_idx)
+        if b is None:
+            raise IndexError(f"layer {layer_idx} not covered by any block")
+        return b
 
     def is_head_of_block(self, layer_idx: int) -> bool:
-        return any(layer_idx == b[0] for b in self.blocks)
+        return layer_idx in self._heads

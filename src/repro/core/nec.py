@@ -16,17 +16,29 @@ This module is the single point of *traffic accounting* for the whole
 repo: the simulator charges DRAM / NoC / cache-port bytes exclusively
 through a :class:`Nec` instance, so the CaMDN vs baseline comparisons in
 benchmarks/ all flow through the same bookkeeping.
+
+Residency is a per-tenant numpy *line bitmap* over the tenant's virtual
+cache space, so every semantic is O(#windows) slice/popcount arithmetic
+instead of one Python iteration per 64-byte line; ``repeat`` counts are
+folded in arithmetically.  Counters are bit-identical to the per-line
+reference implementation retained in ``tests/reference_nec.py``
+(differential-tested in ``tests/test_nec_diff.py``), with one deliberate
+semantic tightening: a CPT fault now raises *before* any counter or
+residency mutation (atomic), where the per-line loop charged lines
+preceding the faulting one.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Set, Tuple
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.cache import SharedCache
 from repro.core.cpt import CachePageTable, CptFault
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Traffic:
     """Byte counters; all monotonically increasing."""
     dram_read: int = 0
@@ -54,18 +66,44 @@ class NecError(Exception):
     pass
 
 
+def layer_charge(read_bytes: int, write_bytes: int, access_bytes: int,
+                 group_size: int, line_bytes: int) -> Tuple[int, int, int, int, int]:
+    """Bulk layer-execution pricing shared by every policy — the single
+    definition of how a layer's DRAM/NoC/hit counters derive from its
+    byte volumes, so CaMDN variants and the transparent-LLC baseline
+    stay apples-to-apples.  Returns the positional argument tuple for
+    :meth:`TrafficLedger.charge_bulk`: (dram_read, dram_write, noc,
+    hits, accesses)."""
+    return (read_bytes, write_bytes,
+            access_bytes * max(1, group_size),
+            max(0, access_bytes - read_bytes - write_bytes) // line_bytes,
+            max(1, access_bytes // line_bytes))
+
+
 class TrafficLedger:
-    """Single point of traffic accounting: a global :class:`Traffic`
-    total plus a per-tenant breakdown, mutated only through
-    :meth:`charge`.  Counters are monotone by construction — negative
-    deltas raise — so every consumer (NEC semantics, the unified
-    runtime, the transparent-LLC pricing path) shares one set of
+    """Single point of traffic accounting: a per-tenant breakdown,
+    mutated only through :meth:`charge` / :meth:`charge_bulk`, plus a
+    global :attr:`total` view.  Counters are monotone by construction —
+    negative deltas raise — so every consumer (NEC semantics, the
+    unified runtime, the transparent-LLC pricing path) shares one set of
     invariants and the CaMDN/baseline comparisons stay apples-to-apples.
+
+    ``total`` is materialized on read (live tenants merged over the
+    retired-tenant accumulator): charging — the per-layer hot path —
+    touches exactly one Traffic record.
     """
 
     def __init__(self):
-        self.total = Traffic()
         self.per_tenant: Dict[str, Traffic] = {}
+        self._retired = Traffic()   # history of dropped tenants
+
+    @property
+    def total(self) -> Traffic:
+        # always a fresh snapshot — never alias the internal accumulator
+        out = Traffic(*dataclasses.astuple(self._retired))
+        for t in self.per_tenant.values():
+            out = out.merged(t)
+        return out
 
     def tenant(self, tenant: str) -> Traffic:
         t = self.per_tenant.get(tenant)
@@ -76,42 +114,80 @@ class TrafficLedger:
     def charge(self, tenant: str, *, dram_read: int = 0, dram_write: int = 0,
                cache_read: int = 0, cache_write: int = 0, noc: int = 0,
                hits: int = 0, accesses: int = 0) -> None:
-        deltas = (dram_read, dram_write, cache_read, cache_write,
-                  noc, hits, accesses)
-        if any(d < 0 for d in deltas):
-            raise NecError(f"negative traffic delta for {tenant}: {deltas}")
-        for t in (self.total, self.tenant(tenant)):
-            t.dram_read += dram_read
-            t.dram_write += dram_write
-            t.cache_read += cache_read
-            t.cache_write += cache_write
-            t.noc += noc
-            t.hits += hits
-            t.accesses += accesses
+        if (dram_read < 0 or dram_write < 0 or cache_read < 0
+                or cache_write < 0 or noc < 0 or hits < 0 or accesses < 0):
+            raise NecError(
+                f"negative traffic delta for {tenant}: "
+                f"{(dram_read, dram_write, cache_read, cache_write, noc, hits, accesses)}")
+        t = self.tenant(tenant)
+        t.dram_read += dram_read
+        t.dram_write += dram_write
+        t.cache_read += cache_read
+        t.cache_write += cache_write
+        t.noc += noc
+        t.hits += hits
+        t.accesses += accesses
+
+    def charge_bulk(self, tenant: str, dram_read: int, dram_write: int,
+                    noc: int, hits: int, accesses: int) -> None:
+        """Positional fast path for the layer-pricing hot loop (no cache
+        data-array bytes; same monotonicity invariant as :meth:`charge`)."""
+        if dram_read < 0 or dram_write < 0 or noc < 0 or hits < 0 or accesses < 0:
+            raise NecError(
+                f"negative traffic delta for {tenant}: "
+                f"{(dram_read, dram_write, noc, hits, accesses)}")
+        t = self.per_tenant.get(tenant)
+        if t is None:
+            t = self.per_tenant[tenant] = Traffic()
+        t.dram_read += dram_read
+        t.dram_write += dram_write
+        t.noc += noc
+        t.hits += hits
+        t.accesses += accesses
 
     def drop_tenant(self, tenant: str) -> Traffic:
-        """Retire a tenant's breakdown entry (totals keep its history);
-        returns the retired counters so a departing tenant's stats can be
-        folded into its final result."""
-        return self.per_tenant.pop(tenant, Traffic())
+        """Retire a tenant's breakdown entry (:attr:`total` keeps its
+        history); returns the retired counters so a departing tenant's
+        stats can be folded into its final result."""
+        t = self.per_tenant.pop(tenant, None)
+        if t is None:
+            return Traffic()
+        self._retired = self._retired.merged(t)
+        return t
 
 
 class Nec:
     """Line-granular NPU-controlled access over a tenant's CPT window.
 
-    Residency is tracked per (tenant, line-aligned vcaddr): under
-    NPU-controlled semantics a line holds valid data iff the program
-    filled or wrote it, and the CPT mapping pins it — there is no
-    transparent eviction, so *within the NPU subspace tenants can never
-    evict each other* (the property the paper's architecture buys).
+    Residency is tracked per tenant as a boolean line bitmap over the
+    virtual cache space: under NPU-controlled semantics a line holds
+    valid data iff the program filled or wrote it, and the CPT mapping
+    pins it — there is no transparent eviction, so *within the NPU
+    subspace tenants can never evict each other* (the property the
+    paper's architecture buys).
+
+    Bitmaps are drawn from a small arena (free list) so back-to-back
+    candidate executions — e.g. :func:`repro.core.codegen.run_candidate`
+    sweeping every GEMM of a layer — reuse one allocation instead of
+    churning a fresh ~200K-entry array per tenant lifetime.
     """
 
     def __init__(self, cache: SharedCache, ledger: Optional[TrafficLedger] = None):
         self.cache = cache
         self.config = cache.config
         self.ledger = ledger if ledger is not None else TrafficLedger()
-        # resident line set: (tenant, line_vcaddr)
-        self._resident: Dict[str, Set[int]] = {}
+        # virtual cache space covers every CPT entry: num_pages pages
+        self._nlines = self.config.num_pages * self.config.lines_per_page
+        self._resident: Dict[str, np.ndarray] = {}   # tenant -> line bitmap
+        self._arena: List[np.ndarray] = []           # recycled bitmaps
+        # way-partition check constants (pcaddr bit layout, Fig. 5b):
+        # the way index is the top field, so one shift per *page* suffices
+        # (pages never straddle ways: way_bytes is a page multiple)
+        c = self.config
+        self._way_shift = ((c.line_bytes.bit_length() - 1)
+                           + (c.num_slices - 1).bit_length()
+                           + (c.num_sets - 1).bit_length())
+        self._cpu_ways = c.num_ways - c.npu_ways
 
     # -- ledger views ---------------------------------------------------
     @property
@@ -125,95 +201,161 @@ class Nec:
     def _line(self, vcaddr: int) -> int:
         return vcaddr & ~(self.config.line_bytes - 1)
 
-    def _check_mapped(self, cpt: CachePageTable, vcaddr: int) -> int:
-        pcaddr = cpt.translate_line(vcaddr)  # raises CptFault if unmapped
-        if not self.cache.check_way_partition(pcaddr):
-            raise NecError(f"pcaddr {pcaddr:#x} escapes the NPU way partition")
-        return pcaddr
+    # -- residency bitmap management ------------------------------------
+    def _res(self, tenant: str) -> np.ndarray:
+        bm = self._resident.get(tenant)
+        if bm is None:
+            if self._arena:
+                bm = self._arena.pop()
+                bm[:] = False
+            else:
+                bm = np.zeros(self._nlines, dtype=bool)
+            self._resident[tenant] = bm
+        return bm
 
     def resident_lines(self, tenant: str) -> int:
-        return len(self._resident.get(tenant, ()))
+        bm = self._resident.get(tenant)
+        return int(np.count_nonzero(bm)) if bm is not None else 0
 
     def invalidate_tenant(self, tenant: str) -> None:
-        """Drop all residency for a tenant (pages reclaimed)."""
-        self._resident.pop(tenant, None)
+        """Drop all residency for a tenant (pages reclaimed); the bitmap
+        returns to the arena for the next tenant lifetime."""
+        bm = self._resident.pop(tenant, None)
+        if bm is not None and len(self._arena) < 8:
+            self._arena.append(bm)
 
     def invalidate_range(self, tenant: str, vcaddr: int, nbytes: int) -> None:
-        lines = self._resident.get(tenant)
-        if not lines:
+        bm = self._resident.get(tenant)
+        if bm is None:
             return
-        lo = self._line(vcaddr)
-        hi = vcaddr + nbytes
-        for l in [l for l in lines if lo <= l < hi]:
-            lines.discard(l)
+        l0, l1 = self._window(vcaddr, nbytes)
+        if l0 < 0:
+            l0 = 0   # no residency below address 0 (negative slice
+        if l1 < 0:  # indices would wrap to the bitmap's tail)
+            l1 = 0
+        bm[l0:l1] = False
+
+    # -- window validation ----------------------------------------------
+    def _window(self, vcaddr: int, nbytes: int):
+        """(first_line_idx, one_past_last_line_idx) covering the byte
+        window — the same line set ``range(line(vcaddr), vcaddr+nbytes,
+        line_bytes)`` iterates.  NOTE: matching that range, a zero-byte
+        window at an unaligned vcaddr still covers the line containing
+        vcaddr (l1 > l0); a negative nbytes yields l1 <= l0 (empty)."""
+        lb = self.config.line_bytes
+        return self._line(vcaddr) // lb, (vcaddr + nbytes + lb - 1) // lb
+
+    def _checked_window(self, cpt: CachePageTable, vcaddr: int, nbytes: int):
+        """The op's line window, validated: CPT mappings and the way
+        partition are checked for every covered line in one vectorized
+        pass (raising CptFault / NecError before any state mutation);
+        an empty window skips validation, exactly like the per-line
+        loop it replaces."""
+        l0, l1 = self._window(vcaddr, nbytes)
+        if l1 <= l0:
+            return l0, l0
+        lb = self.config.line_bytes
+        pcpns = cpt.translate_range(l0 * lb, (l1 - l0) * lb)
+        pb = self.config.page_bytes
+        base = pcpns * pb
+        ways = (base >> self._way_shift) + self._cpu_ways
+        last = ((base + pb - lb) >> self._way_shift) + self._cpu_ways
+        if int(max(ways.max(), last.max())) >= self.config.num_ways:
+            bad = int(base[int(np.argmax(np.maximum(ways, last)))])
+            raise NecError(f"pcaddr {bad:#x} escapes the NPU way partition")
+        return l0, l1
 
     # -- basic semantics -------------------------------------------------
-    def fill(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int) -> None:
-        """memory -> cache (explicit prefetch/placement)."""
+    def fill(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int,
+             repeat: int = 1) -> None:
+        """memory -> cache (explicit prefetch/placement).  Fill is
+        idempotent on resident lines, so ``repeat`` > 1 charges exactly
+        what ``repeat`` sequential fills would: the first pass moves the
+        missing lines, the rest are no-ops."""
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
+        l0, l1 = self._checked_window(cpt, vcaddr, nbytes)
+        if l1 == l0:
+            return
         lb = self.config.line_bytes
-        res = self._resident.setdefault(tenant, set())
-        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
-            self._check_mapped(cpt, line)
-            if line not in res:
-                res.add(line)
-                self.ledger.charge(tenant, dram_read=lb, cache_write=lb)
+        bm = self._res(tenant)
+        n_new = (l1 - l0) - int(np.count_nonzero(bm[l0:l1]))
+        if n_new:
+            bm[l0:l1] = True
+            self.ledger.charge(tenant, dram_read=lb * n_new,
+                               cache_write=lb * n_new)
 
-    def writeback(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int) -> None:
-        """cache -> memory."""
+    def writeback(self, tenant: str, cpt: CachePageTable, vcaddr: int,
+                  nbytes: int, repeat: int = 1) -> None:
+        """cache -> memory.  Residency is unchanged, so ``repeat``
+        multiplies the charge (each pass writes the resident lines)."""
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
+        l0, l1 = self._checked_window(cpt, vcaddr, nbytes)
+        if l1 == l0:
+            return
         lb = self.config.line_bytes
-        res = self._resident.setdefault(tenant, set())
-        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
-            self._check_mapped(cpt, line)
-            if line in res:
-                self.ledger.charge(tenant, cache_read=lb, dram_write=lb)
+        bm = self._res(tenant)
+        n_res = int(np.count_nonzero(bm[l0:l1]))
+        if n_res:
+            self.ledger.charge(tenant, cache_read=lb * n_res * repeat,
+                               dram_write=lb * n_res * repeat)
 
     def read(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int,
              fill_on_miss: bool = True, repeat: int = 1) -> int:
         """cache -> NPU.  Returns bytes that missed (and were filled).
 
         ``repeat`` charges the read as if issued ``repeat`` times
-        back-to-back in ONE pass over the line set (the codegen
+        back-to-back in ONE pass over the bitmap (the codegen
         aggregation path): a resident line hits every time; a missing
         line misses once, is filled, then hits ``repeat - 1`` times.
         Counters are exactly those of ``repeat`` sequential calls."""
         if repeat < 1:
             raise NecError(f"repeat must be >= 1, got {repeat}")
+        l0, l1 = self._checked_window(cpt, vcaddr, nbytes)
+        if l1 == l0:
+            return 0
         lb = self.config.line_bytes
-        res = self._resident.setdefault(tenant, set())
-        missed = 0
-        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
-            self._check_mapped(cpt, line)
-            if line in res:
-                self.ledger.charge(tenant, accesses=repeat, hits=repeat,
-                                   cache_read=lb * repeat, noc=lb * repeat)
-            else:
-                missed += lb
-                if fill_on_miss:
-                    res.add(line)
-                    self.ledger.charge(tenant, accesses=1, dram_read=lb,
-                                       cache_write=lb, cache_read=lb, noc=lb)
-                    if repeat > 1:
-                        self.ledger.charge(
-                            tenant, accesses=repeat - 1, hits=repeat - 1,
-                            cache_read=lb * (repeat - 1),
-                            noc=lb * (repeat - 1))
-                else:
-                    missed += lb * (repeat - 1)
-                    self.ledger.charge(tenant, accesses=repeat,
-                                       dram_read=lb * repeat,
-                                       noc=lb * repeat)
-        return missed
+        bm = self._res(tenant)
+        n = l1 - l0
+        n_hit = int(np.count_nonzero(bm[l0:l1]))
+        n_miss = n - n_hit
+        if fill_on_miss:
+            if n_miss:
+                bm[l0:l1] = True
+            self.ledger.charge(
+                tenant,
+                accesses=n * repeat,
+                hits=n_hit * repeat + n_miss * (repeat - 1),
+                cache_read=lb * n * repeat,
+                noc=lb * n * repeat,
+                dram_read=lb * n_miss,
+                cache_write=lb * n_miss)
+            return n_miss * lb
+        self.ledger.charge(
+            tenant,
+            accesses=n * repeat,
+            hits=n_hit * repeat,
+            cache_read=lb * n_hit * repeat,
+            noc=lb * n * repeat,
+            dram_read=lb * n_miss * repeat)
+        return n_miss * lb * repeat
 
-    def write(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int) -> None:
-        """NPU -> cache (no DRAM traffic until writeback)."""
+    def write(self, tenant: str, cpt: CachePageTable, vcaddr: int, nbytes: int,
+              repeat: int = 1) -> None:
+        """NPU -> cache (no DRAM traffic until writeback).  NPU-
+        controlled writes never miss; ``repeat`` multiplies the charge."""
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
+        l0, l1 = self._checked_window(cpt, vcaddr, nbytes)
+        if l1 == l0:
+            return
         lb = self.config.line_bytes
-        res = self._resident.setdefault(tenant, set())
-        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
-            self._check_mapped(cpt, line)
-            res.add(line)
-            # NPU-controlled writes never miss
-            self.ledger.charge(tenant, accesses=1, hits=1, noc=lb,
-                               cache_write=lb)
+        bm = self._res(tenant)
+        n = l1 - l0
+        bm[l0:l1] = True
+        self.ledger.charge(tenant, accesses=n * repeat, hits=n * repeat,
+                           noc=lb * n * repeat, cache_write=lb * n * repeat)
 
     # -- advanced semantics ------------------------------------------------
     def bypass_read(self, tenant: str, nbytes: int, repeat: int = 1) -> None:
@@ -239,21 +381,21 @@ class Nec:
         data-array access, ``group_size`` NoC deliveries."""
         if group_size < 1:
             raise NecError("multicast group must be >= 1")
+        l0, l1 = self._checked_window(cpt, vcaddr, nbytes)
+        if l1 == l0:
+            return 0
         lb = self.config.line_bytes
-        res = self._resident.setdefault(tenant, set())
-        missed = 0
-        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
-            self._check_mapped(cpt, line)
-            if line in res:
-                self.ledger.charge(tenant, accesses=1, hits=1, cache_read=lb,
-                                   noc=lb * group_size)
-            else:
-                missed += lb
-                res.add(line)
-                self.ledger.charge(tenant, accesses=1, dram_read=lb,
-                                   cache_write=lb, cache_read=lb,
-                                   noc=lb * group_size)
-        return missed
+        bm = self._res(tenant)
+        n = l1 - l0
+        n_hit = int(np.count_nonzero(bm[l0:l1]))
+        n_miss = n - n_hit
+        if n_miss:
+            bm[l0:l1] = True
+        self.ledger.charge(tenant, accesses=n, hits=n_hit,
+                           cache_read=lb * n, cache_write=lb * n_miss,
+                           dram_read=lb * n_miss,
+                           noc=lb * n * group_size)
+        return n_miss * lb
 
     def multicast_bypass_read(self, tenant: str, nbytes: int, group_size: int) -> None:
         """memory -> a group of NPUs: ONE DRAM access total (vs
@@ -273,11 +415,6 @@ class Nec:
         have to touch DRAM.  With ``group_size`` > 1 one fetch serves the
         whole NPU group (multicast), costing extra NoC deliveries only.
         """
-        lb = self.config.line_bytes
-        noc = access_bytes * max(1, group_size)
-        self.ledger.charge(
-            tenant,
-            dram_read=read_bytes, dram_write=write_bytes,
-            accesses=max(1, access_bytes // lb),
-            hits=max(0, access_bytes - read_bytes - write_bytes) // lb,
-            noc=noc)
+        self.ledger.charge_bulk(tenant, *layer_charge(
+            read_bytes, write_bytes, access_bytes, group_size,
+            self.config.line_bytes))

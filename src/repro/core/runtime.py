@@ -37,6 +37,16 @@ from repro.core.policy import CachePolicy, CamdnPolicy, ExecutionPlan
 from repro.core.types import ModelGraph
 
 
+# The offline mapping phase is a pure function of (layer graph, mapper
+# config), and the benchmark harness instantiates the same handful of
+# model graphs in every one of dozens of sim runs — so the solved
+# mapping plus its derived profiling tables are memoized process-wide on
+# the graph's *content* (LayerSpec is frozen/hashable).  This is the
+# single biggest wall-time lever in fig2/fig7: MCT construction drops
+# from per-sim to once per distinct (model, config).
+_DERIVED_CACHE: Dict[tuple, tuple] = {}
+
+
 class TenantModel:
     """A model prepared for multi-tenant execution: graph + mapping +
     profiling tables (t_est per layer/block, STREAM-plan access bytes)."""
@@ -45,15 +55,24 @@ class TenantModel:
                  mapping: Optional[ModelMapping] = None):
         self.graph = graph
         self.mcfg = mcfg or MapperConfig()
-        self.mapping = mapping or build_model_mapping(graph, self.mcfg)
-        cf, df = self.mcfg.compute_flops, self.mcfg.dram_bps
-        self.layer_t_est: List[float] = [
-            mct.lwms[-1].t_est(cf, df) for mct in self.mapping.mcts]
-        self.block_t_est: Dict[Tuple[int, int], float] = {
-            b: sum(self.layer_t_est[b[0]:b[1]]) for b in self.mapping.blocks}
-        # STREAM-plan bytes = logical cache-request traffic per layer
-        self.stream_bytes: List[int] = [
-            map_layer_lwm(l, 0, self.mcfg).dram_bytes for l in graph.layers]
+        key = (graph.name, tuple(graph.layers), self.mcfg)
+        cached = _DERIVED_CACHE.get(key) if mapping is None else None
+        if cached is None:
+            self.mapping = mapping or build_model_mapping(graph, self.mcfg)
+            cf, df = self.mcfg.compute_flops, self.mcfg.dram_bps
+            self.layer_t_est: List[float] = [
+                mct.lwms[-1].t_est(cf, df) for mct in self.mapping.mcts]
+            self.block_t_est: Dict[Tuple[int, int], float] = {
+                b: sum(self.layer_t_est[b[0]:b[1]]) for b in self.mapping.blocks}
+            # STREAM-plan bytes = logical cache-request traffic per layer
+            self.stream_bytes: List[int] = [
+                map_layer_lwm(l, 0, self.mcfg).dram_bytes for l in graph.layers]
+            if mapping is None:
+                _DERIVED_CACHE[key] = (self.mapping, self.layer_t_est,
+                                       self.block_t_est, self.stream_bytes)
+        else:
+            (self.mapping, self.layer_t_est, self.block_t_est,
+             self.stream_bytes) = cached
 
     @property
     def num_layers(self) -> int:
@@ -83,6 +102,7 @@ class TenantTask:
         self.group_size = group_size
         self.deadline_s = deadline_s
         self.cpt = CachePageTable(cache.config)
+        self._n_layers = model.num_layers
         self.layer_idx = 0
         self.selection: Optional[Selection] = None
         self._held_pages: List[int] = []
@@ -94,7 +114,7 @@ class TenantTask:
     # ------------------------------------------------------------------
     @property
     def done(self) -> bool:
-        return self.layer_idx >= self.model.num_layers
+        return self.layer_idx >= self._n_layers
 
     @property
     def held_pages(self) -> int:

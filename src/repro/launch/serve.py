@@ -31,6 +31,7 @@ import numpy as np
 from repro.core.allocator import DynamicCacheAllocator, Selection
 from repro.core.cache import CacheConfig, SharedCache
 from repro.core.mapping import MapperConfig
+from repro.core.mct import MCT, ModelMapping
 from repro.core.nec import Nec
 from repro.core.plan import KernelPlan
 from repro.core.policy import CamdnPolicy
@@ -140,13 +141,23 @@ class MultiTenantServer:
         block_fused_ffn claim, or the lowering would silently demote
         every granted LBM selection back to tiled LWM kernels.  Quoted
         for the REAL cfg.d_ff — the dimension the kernel executes with
-        (block_fused_ffn asserts d_ff % block_f == 0)."""
+        (block_fused_ffn asserts d_ff % block_f == 0).
+
+        Copy-on-write: the TenantModel's mapping may be the process-wide
+        memoized instance shared with other tenants/servers, so the
+        aligned MCTs go into a fresh ModelMapping instead of mutating
+        the shared one."""
         eb = _elem_bytes(cfg)
         need = fused_ffn_pages(max(self.batch, LANE), cfg.d_model,
                                cfg.d_ff, eb)
+        mcts = []
         for mct in tm.mapping.mcts:
             if mct.lbm is not None and mct.lbm.p_need < need:
-                mct.lbm = dataclasses.replace(mct.lbm, p_need=need)
+                mct = MCT(mct.layer_name, list(mct.lwms),
+                          dataclasses.replace(mct.lbm, p_need=need))
+            mcts.append(mct)
+        tm.mapping = ModelMapping(tm.mapping.model_name, mcts,
+                                  tm.mapping.blocks)
 
     def _schedule_block(self, t: Tenant, now: float
                         ) -> List[Tuple[Selection, int]]:
@@ -273,7 +284,7 @@ def main() -> None:
     ap.add_argument("--archs", nargs="+",
                     default=["yi-9b", "olmoe-1b-7b", "mamba2-370m"])
     ap.add_argument("--steps", type=int, default=16)
-    ap.add_argument("--pages", type=int, default=64)
+    ap.add_argument("--pages", type=int, default=128)
     args = ap.parse_args()
     srv = MultiTenantServer(args.archs, total_pages=args.pages)
     out = srv.run(args.steps)

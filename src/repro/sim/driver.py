@@ -180,11 +180,11 @@ class TenantDriver:
                                  arrived_at=sim.engine.now)
         self.task = TenantTask(task_id, model, sim.cache, sim.nec,
                                sim.policy, group_size=spec.group_size)
+        self.n_layers = model.num_layers
         self.layer_idx = 0
         self.infer_start = 0.0
         self.cores_held = 0
-        self._compute_done = False
-        self._dram_done = False
+        self._compute_end = 0.0
         self._timeout_gen = 0
         self._waiting = False
         self.stopped = False
@@ -264,8 +264,7 @@ class TenantDriver:
         if math.isinf(sel.t_ahead):
             return
         self._timeout_gen += 1
-        gen = self._timeout_gen
-        self.sim.engine.at(sel.t_ahead, lambda: self._on_timeout(gen))
+        self.sim.engine.at(sel.t_ahead, self._on_timeout, self._timeout_gen)
 
     def _on_timeout(self, gen: int) -> None:
         if gen != self._timeout_gen or not self._waiting:
@@ -278,28 +277,29 @@ class TenantDriver:
             self._try_alloc()
 
     def _execute(self, compute_s: float, dram_bytes: float) -> None:
-        self._compute_done = self._dram_done = False
+        # the layer finishes at max(compute_done, dram_done); compute is
+        # a private per-core resource, so it needs no heap event of its
+        # own — the DRAM completion checks the precomputed end time and
+        # only schedules the residual wait when compute is the laggard
         eng = self.sim.engine
-        eng.schedule(compute_s, self._on_compute_done)
+        self._compute_end = eng.now + compute_s
         w = self._bw_weight()
         # service-time inflation for the scheduler's DRAM efficiency
         # (traffic counters stay pure byte counts)
         eff = self.sim.spec.dram_efficiency
         self.sim.dram.submit(dram_bytes / eff, self._on_dram_done, weight=w)
 
-    def _on_compute_done(self) -> None:
-        self._compute_done = True
-        if self._dram_done:
-            self._layer_done()
-
     def _on_dram_done(self) -> None:
-        self._dram_done = True
-        if self._compute_done:
+        remaining = self._compute_end - self.sim.engine.now
+        if remaining > 0:
+            self.sim.engine.schedule(remaining, self._layer_done)
+        else:
             self._layer_done()
 
     def _layer_done(self) -> None:
         self.task.end_layer(self.sim.engine.now)
-        self.sim.wake_page_waiters()
+        if self.sim.page_waiters:
+            self.sim.wake_page_waiters()
         self.layer_idx = self.task.layer_idx
         if self.task.done:
             self._finish_inference()
@@ -310,14 +310,19 @@ class TenantDriver:
     def _slack_ratio(self) -> float:
         target = self.qos_target_s
         elapsed = self.sim.engine.now - self.infer_start
-        progress = max(self.layer_idx / max(1, self.model.num_layers), 0.05)
+        progress = max(self.layer_idx / max(1, self.n_layers), 0.05)
         predicted = elapsed / progress
         return predicted / target if target > 0 else 1.0
 
     def _bw_weight(self) -> float:
+        # fair sharing never inspects slack — skip computing it
+        if self.sim.bw_policy.kind == "fair":
+            return 1.0
         return self.sim.bw_policy.weight(self._slack_ratio())
 
     def _cores_wanted(self) -> int:
+        if not self.sim.core_policy.enabled:
+            return 1
         last = self._slack_ratio() if self.result.inferences else 1.0
         return self.sim.core_policy.cores_for(last, self.sim.cores.free)
 
@@ -379,7 +384,7 @@ class MultiTenantSim:
             if spec.arrive_at <= 0.0:
                 self._admit(spec)
             elif spec.arrive_at < self.horizon:
-                self.engine.at(spec.arrive_at, lambda s=spec: self._admit(s))
+                self.engine.at(spec.arrive_at, self._admit, spec)
         self.engine.run(until=math.inf)
         for d in self.drivers:
             d._depart()   # idempotent; folds any residual ledger entry

@@ -17,63 +17,115 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 
 class Engine:
+    """Event heap plus registered *clocks*: a clock is a resource whose
+    next event time changes on every interaction (the processor-sharing
+    DRAM pool re-targets its completion on every membership change).
+    Modelling it as a polled ``next_t``/``fire()`` pair instead of heap
+    events removes the push-then-invalidate churn such resources would
+    otherwise inflict on the heap — the run loop just takes whichever of
+    heap-top / clocks is earliest (heap wins ties)."""
+
     def __init__(self):
         self.now = 0.0
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._heap: List[Tuple[float, int, Callable, object]] = []
         self._seq = itertools.count()
+        self._clocks: List = []   # objects exposing .next_t and .fire()
 
-    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+    def add_clock(self, clock) -> None:
+        self._clocks.append(clock)
+
+    def schedule(self, delay: float, fn: Callable, arg: object = None) -> None:
+        """Fire ``fn()`` — or ``fn(arg)`` when ``arg`` is given — after
+        ``delay`` seconds.  Passing the argument through the heap entry
+        lets hot callers avoid allocating a closure per event."""
         if delay < 0 or math.isnan(delay):
             raise ValueError(f"bad delay {delay}")
         if math.isinf(delay):
             return  # never fires
-        heapq.heappush(self._heap, (self.now + delay, next(self._seq), fn))
+        heapq.heappush(self._heap, (self.now + delay, next(self._seq), fn, arg))
 
-    def at(self, t: float, fn: Callable[[], None]) -> None:
-        self.schedule(max(0.0, t - self.now), fn)
+    def at(self, t: float, fn: Callable, arg: object = None) -> None:
+        self.schedule(max(0.0, t - self.now), fn, arg)
+
+    def push_at(self, t: float, fn: Callable, arg: object = None) -> None:
+        """Unchecked absolute-time push for internal hot paths whose
+        delay is already known finite and non-negative."""
+        heapq.heappush(self._heap, (t, next(self._seq), fn, arg))
 
     def run(self, until: float = math.inf, max_events: int = 50_000_000) -> None:
+        heap = self._heap
+        clocks = self._clocks
+        inf = math.inf
         n = 0
-        while self._heap and n < max_events:
-            t, _, fn = heapq.heappop(self._heap)
-            if t > until:
+        while n < max_events:
+            t_best = heap[0][0] if heap else inf
+            src = None
+            for c in clocks:
+                tc = c.next_t
+                if tc < t_best:
+                    t_best = tc
+                    src = c
+            if t_best == inf:
+                return
+            if t_best > until:
                 self.now = until
                 return
-            self.now = t
-            fn()
+            self.now = t_best
+            if src is None:
+                _, _, fn, arg = heapq.heappop(heap)
+                if arg is None:
+                    fn()
+                else:
+                    fn(arg)
+            else:
+                src.fire()
             n += 1
-        if n >= max_events:
-            raise RuntimeError("event budget exhausted (livelock?)")
+        raise RuntimeError("event budget exhausted (livelock?)")
 
     @property
     def idle(self) -> bool:
-        return not self._heap
+        return not self._heap and all(
+            math.isinf(c.next_t) for c in self._clocks)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _DramJob:
     job_id: int
-    bytes_remaining: float
     weight: float
     on_done: Callable[[], None]
+    v_target: float   # virtual time at which the job completes
 
 
 class DramResource:
-    """Weighted processor-sharing over ``total_bps`` bytes/second.
+    """Weighted processor-sharing over ``total_bps`` bytes/second,
+    simulated in *virtual time* (the classic PS/GPS formulation): virtual
+    time V advances at ``total_bps / sum(weights)``, so a job admitted at
+    V0 with ``nbytes`` and ``weight`` completes exactly when V reaches
+    ``V0 + nbytes / weight`` — a constant, membership changes
+    notwithstanding.  Completions therefore live in one heap ordered by
+    V-target and every operation is O(log jobs) with no per-job scans
+    (this pool is the innermost loop of every sim run).  Weight changes
+    re-target the job (remaining virtual service rescales by
+    old/new weight) with lazy deletion of the stale heap entry.
 
-    On every membership or weight change, progress is advanced and the
-    next completion event is re-armed (generation counter invalidates
-    stale events)."""
+    The pool is an Engine *clock*: ``next_t`` is the wall time of the
+    earliest completion and ``fire()`` delivers it, so re-targeting on a
+    membership change is a plain assignment — no heap event to push or
+    invalidate."""
 
     def __init__(self, engine: Engine, total_bps: float):
         self.engine = engine
         self.total_bps = total_bps
         self.jobs: Dict[int, _DramJob] = {}
+        self._vheap: List[Tuple[float, int]] = []   # (v_target, job_id)
+        self._v = 0.0
         self._ids = itertools.count()
         self._last = 0.0
-        self._gen = 0
+        self._wsum = 0.0   # incrementally-maintained sum of job weights
+        self.next_t = math.inf   # wall time of the earliest completion
         self.busy_seconds = 0.0
         self.bytes_served = 0.0
+        engine.add_clock(self)
 
     # -- internals ------------------------------------------------------
     def _advance(self) -> None:
@@ -81,15 +133,9 @@ class DramResource:
         self._last = self.engine.now
         if dt <= 0 or not self.jobs:
             return
-        wsum = sum(j.weight for j in self.jobs.values())
-        served = 0.0
-        for j in self.jobs.values():
-            rate = self.total_bps * j.weight / wsum
-            take = min(j.bytes_remaining, rate * dt)
-            j.bytes_remaining -= take
-            served += take
+        self._v += dt * self.total_bps / self._wsum
         self.busy_seconds += dt
-        self.bytes_served += served
+        self.bytes_served += dt * self.total_bps
 
     # Jobs with less than a cache line left are done (prevents float
     # asymptotes); ticks are floored at 1ns so equal-timestamp re-arms
@@ -97,24 +143,47 @@ class DramResource:
     DRAIN_BYTES = 64.0
     MIN_TICK = 1e-9
 
-    def _rearm(self) -> None:
-        self._gen += 1
-        gen = self._gen
-        if not self.jobs:
-            return
-        wsum = sum(j.weight for j in self.jobs.values())
-        eta = min(j.bytes_remaining / (self.total_bps * j.weight / wsum)
-                  for j in self.jobs.values())
-        self.engine.schedule(max(eta, self.MIN_TICK), lambda: self._on_tick(gen))
+    def _top(self) -> Optional[Tuple[float, int]]:
+        """Heap top, dropping lazily-deleted (re-targeted / completed)
+        entries."""
+        heap = self._vheap
+        while heap:
+            vt, jid = heap[0]
+            j = self.jobs.get(jid)
+            if j is not None and j.v_target == vt:
+                return heap[0]
+            heapq.heappop(heap)
+        return None
 
-    def _on_tick(self, gen: int) -> None:
-        if gen != self._gen:
-            return  # stale
+    def _rearm(self) -> None:
+        if not self.jobs:
+            self._wsum = 0.0   # swallow any float drift at quiescence
+            self._v = 0.0
+            self.next_t = math.inf
+            return
+        top = self._top()
+        eta = (top[0] - self._v) * self._wsum / self.total_bps
+        if eta < self.MIN_TICK:
+            eta = self.MIN_TICK
+        self.next_t = self.engine.now + eta
+
+    def fire(self) -> None:
+        """Deliver the completion(s) due at ``next_t`` (Engine clock
+        protocol)."""
         self._advance()
-        done = [j for j in self.jobs.values()
-                if j.bytes_remaining <= self.DRAIN_BYTES]
-        for j in done:
-            del self.jobs[j.job_id]
+        done = []
+        while True:
+            top = self._top()
+            if top is None:
+                break
+            vt, jid = top
+            j = self.jobs[jid]
+            if (vt - self._v) * j.weight > self.DRAIN_BYTES:
+                break
+            heapq.heappop(self._vheap)
+            del self.jobs[jid]
+            self._wsum -= j.weight
+            done.append(j)
         self._rearm()
         for j in done:
             j.on_done()
@@ -125,16 +194,30 @@ class DramResource:
         self._advance()
         jid = next(self._ids)
         if nbytes <= 0:
-            self.engine.schedule(0.0, on_done)
+            self.engine.push_at(self.engine.now, on_done)
             return jid
-        self.jobs[jid] = _DramJob(jid, float(nbytes), max(weight, 1e-6), on_done)
+        weight = max(weight, 1e-6)
+        j = _DramJob(jid, weight, on_done, self._v + nbytes / weight)
+        self.jobs[jid] = j
+        self._wsum += weight
+        heapq.heappush(self._vheap, (j.v_target, jid))
+        # always re-arm: the clock must fire only at computed completion
+        # times, because the DRAIN_BYTES tolerance assumes a firing IS a
+        # completion (an early firing could otherwise finish a
+        # nearly-done job a line short)
         self._rearm()
         return jid
 
     def set_weight(self, job_id: int, weight: float) -> None:
-        if job_id in self.jobs:
+        j = self.jobs.get(job_id)
+        if j is not None:
             self._advance()
-            self.jobs[job_id].weight = max(weight, 1e-6)
+            weight = max(weight, 1e-6)
+            # remaining virtual service rescales with the weight ratio
+            j.v_target = self._v + (j.v_target - self._v) * j.weight / weight
+            self._wsum += weight - j.weight
+            j.weight = weight
+            heapq.heappush(self._vheap, (j.v_target, job_id))
             self._rearm()
 
     @property

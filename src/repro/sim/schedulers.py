@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.allocator import Selection
 from repro.core.mapping import MapperConfig, map_layer_lwm
 from repro.core.mct import CacheMapEntry, MappingCandidate
+from repro.core.nec import layer_charge
 from repro.core.policy import ExecutionPlan
 from repro.core.types import LayerSpec, ModelGraph
 
@@ -185,12 +186,23 @@ class TransparentPolicy:
         self.mcfg = mcfg or MapperConfig()
         self.params = params or TransparentParams()
         self._attached: Dict[str, str] = {}   # task id -> model name
+        self._distinct: int = 1
+        # (model, layer, n_distinct) -> Selection: the contention price
+        # is a pure function of that key, and each layer is re-selected
+        # once per inference — caching it takes select() off the
+        # per-event hot path (Selections are treated read-only).
+        self._sel_cache: Dict[Tuple[str, int, int], Selection] = {}
+        # (model, layer, n_distinct, group) -> (ExecutionPlan, charge
+        # kwargs): the grant-time pricing for the same key, so on_grant
+        # is one dict hit plus one ledger charge
+        self._grant_cache: Dict[Tuple[str, int, int, int],
+                                Tuple[ExecutionPlan, dict]] = {}
 
     @property
     def distinct_active(self) -> int:
         """Distinct model count among co-located tasks (same-model
         instances share read-only weights in a transparent LLC)."""
-        return len(set(self._attached.values())) or 1
+        return self._distinct
 
     def _plan(self, task) -> TransparentModelPlan:
         return transparent_plan(task.model.graph, self.mcfg)  # memoized
@@ -198,36 +210,52 @@ class TransparentPolicy:
     # -- tenancy -------------------------------------------------------
     def attach(self, task) -> None:
         self._attached[task.id] = task.model.graph.name
+        self._distinct = len(set(self._attached.values())) or 1
 
     def detach(self, task) -> None:
         self._attached.pop(task.id, None)
+        self._distinct = len(set(self._attached.values())) or 1
 
     # -- per-layer decisions -------------------------------------------
     def select(self, task, now: float) -> Selection:
         i = task.layer_idx
+        key = (task.model.graph.name, i, self._distinct)
+        sel = self._sel_cache.get(key)
+        if sel is not None:
+            return sel
         rd, wr, access = transparent_layer_dram(
-            self._plan(task), i, self.cache_bytes, self.distinct_active,
+            self._plan(task), i, self.cache_bytes, self._distinct,
             self.params)
         layer = task.model.graph.layers[i]
         cand = MappingCandidate(
             kind="LWM", p_need=0, dram_bytes=rd + wr, flops=layer.flops,
             loops=(), cache_map=(CacheMapEntry("llc", 0, 0),),
             usage_limit_bytes=0)
-        return Selection(cand, 0, INF)   # zero pages; never waits
+        sel = Selection(cand, 0, INF)   # zero pages; never waits
+        self._sel_cache[key] = sel
+        return sel
 
     def on_timeout(self, task, now: float) -> Selection:
         return task.selection             # nothing to downgrade
 
     def on_grant(self, task, now: float) -> ExecutionPlan:
         i = task.layer_idx
-        cand = task.selection.candidate
-        plan = self._plan(task)
-        wr = plan.out_bytes[i]
-        rd = max(0, cand.dram_bytes - wr)
-        access = plan.stream_bytes[i]
-        task.nec.charge_layer_execution(task.id, rd, wr, access,
-                                        group_size=task.group_size)
-        return ExecutionPlan(plan.compute_s[i] / task.group_size, rd, wr, access)
+        key = (task.model.graph.name, i, self._distinct, task.group_size)
+        hit = self._grant_cache.get(key)
+        if hit is None:
+            cand = task.selection.candidate
+            plan = self._plan(task)
+            wr = plan.out_bytes[i]
+            rd = max(0, cand.dram_bytes - wr)
+            access = plan.stream_bytes[i]
+            charge = layer_charge(rd, wr, access, task.group_size,
+                                  task.nec.config.line_bytes)
+            hit = (ExecutionPlan(plan.compute_s[i] / task.group_size,
+                                 rd, wr, access), charge)
+            self._grant_cache[key] = hit
+        eplan, charge = hit
+        task.nec.ledger.charge_bulk(task.id, *charge)
+        return eplan
 
     def on_layer_end(self, task, now: float) -> None:
         task.advance_layer(now)

@@ -1,0 +1,217 @@
+"""Per-line reference NEC: the original O(nbytes/64) pure-Python
+implementation, retained verbatim as the differential-testing oracle for
+the vectorized bitmap NEC in ``repro.core.nec``.
+
+Every semantic iterates one 64-byte line at a time against a dict-backed
+CPT, exactly as the production code did before the bitmap rewrite; the
+property tests in ``tests/test_nec_diff.py`` assert the two produce
+bit-identical :class:`~repro.core.nec.Traffic` counters across random op
+streams, tenants, and partial-line offsets.
+
+(One intentional divergence: the production NEC validates a whole window
+before mutating anything, so a CPT fault is atomic; this oracle faults
+mid-stream with partial charges, as the original did.  The differential
+tests therefore only compare fault-free streams, and fault *raising* is
+covered separately.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set
+
+from repro.core.cache import CacheConfig, SharedCache
+from repro.core.cpt import CptFault
+from repro.core.nec import NecError, TrafficLedger
+
+
+@dataclasses.dataclass
+class RefCptEntry:
+    pcpn: int
+    valid: bool = True
+
+
+class RefCachePageTable:
+    """Dict-backed CPT (the pre-vectorization implementation)."""
+
+    def __init__(self, config: CacheConfig):
+        self.config = config
+        self.max_entries = config.num_pages
+        self._entries: Dict[int, RefCptEntry] = {}
+
+    def map(self, vcpn: int, pcpn: int) -> None:
+        if not (0 <= vcpn < self.max_entries):
+            raise ValueError(f"vcpn {vcpn} out of range (max {self.max_entries})")
+        if not (0 <= pcpn < self.config.num_pages):
+            raise ValueError(f"pcpn {pcpn} out of range")
+        self._entries[vcpn] = RefCptEntry(pcpn=pcpn, valid=True)
+
+    def map_pages(self, pcpns, base_vcpn: int = 0) -> None:
+        for i, p in enumerate(pcpns):
+            self.map(base_vcpn + i, p)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def translate(self, vcaddr: int) -> int:
+        page = self.config.page_bytes
+        vcpn, offset = divmod(vcaddr, page)
+        e = self._entries.get(vcpn)
+        if e is None or not e.valid:
+            raise CptFault(f"vcpn {vcpn} not mapped")
+        return e.pcpn * page + offset
+
+    def translate_line(self, vcaddr: int) -> int:
+        pc = self.translate(vcaddr)
+        return pc & ~(self.config.line_bytes - 1)
+
+
+class RefNec:
+    """Line-granular NEC with per-(tenant, line) ``Set[int]`` residency —
+    the pre-vectorization hot path, one Python iteration per line."""
+
+    def __init__(self, cache: SharedCache, ledger: Optional[TrafficLedger] = None):
+        self.cache = cache
+        self.config = cache.config
+        self.ledger = ledger if ledger is not None else TrafficLedger()
+        self._resident: Dict[str, Set[int]] = {}
+
+    @property
+    def traffic(self):
+        return self.ledger.total
+
+    @property
+    def per_tenant(self):
+        return self.ledger.per_tenant
+
+    def _line(self, vcaddr: int) -> int:
+        return vcaddr & ~(self.config.line_bytes - 1)
+
+    def _check_mapped(self, cpt, vcaddr: int) -> int:
+        pcaddr = cpt.translate_line(vcaddr)
+        if not self.cache.check_way_partition(pcaddr):
+            raise NecError(f"pcaddr {pcaddr:#x} escapes the NPU way partition")
+        return pcaddr
+
+    def resident_lines(self, tenant: str) -> int:
+        return len(self._resident.get(tenant, ()))
+
+    def invalidate_tenant(self, tenant: str) -> None:
+        self._resident.pop(tenant, None)
+
+    def invalidate_range(self, tenant: str, vcaddr: int, nbytes: int) -> None:
+        lines = self._resident.get(tenant)
+        if not lines:
+            return
+        lo = self._line(vcaddr)
+        hi = vcaddr + nbytes
+        for l in [l for l in lines if lo <= l < hi]:
+            lines.discard(l)
+
+    # -- basic semantics -------------------------------------------------
+    def fill(self, tenant: str, cpt, vcaddr: int, nbytes: int,
+             repeat: int = 1) -> None:
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
+        lb = self.config.line_bytes
+        res = self._resident.setdefault(tenant, set())
+        for _ in range(repeat):
+            for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
+                self._check_mapped(cpt, line)
+                if line not in res:
+                    res.add(line)
+                    self.ledger.charge(tenant, dram_read=lb, cache_write=lb)
+
+    def writeback(self, tenant: str, cpt, vcaddr: int, nbytes: int,
+                  repeat: int = 1) -> None:
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
+        lb = self.config.line_bytes
+        res = self._resident.setdefault(tenant, set())
+        for _ in range(repeat):
+            for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
+                self._check_mapped(cpt, line)
+                if line in res:
+                    self.ledger.charge(tenant, cache_read=lb, dram_write=lb)
+
+    def read(self, tenant: str, cpt, vcaddr: int, nbytes: int,
+             fill_on_miss: bool = True, repeat: int = 1) -> int:
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
+        lb = self.config.line_bytes
+        res = self._resident.setdefault(tenant, set())
+        missed = 0
+        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
+            self._check_mapped(cpt, line)
+            if line in res:
+                self.ledger.charge(tenant, accesses=repeat, hits=repeat,
+                                   cache_read=lb * repeat, noc=lb * repeat)
+            else:
+                missed += lb
+                if fill_on_miss:
+                    res.add(line)
+                    self.ledger.charge(tenant, accesses=1, dram_read=lb,
+                                       cache_write=lb, cache_read=lb, noc=lb)
+                    if repeat > 1:
+                        self.ledger.charge(
+                            tenant, accesses=repeat - 1, hits=repeat - 1,
+                            cache_read=lb * (repeat - 1),
+                            noc=lb * (repeat - 1))
+                else:
+                    missed += lb * (repeat - 1)
+                    self.ledger.charge(tenant, accesses=repeat,
+                                       dram_read=lb * repeat,
+                                       noc=lb * repeat)
+        return missed
+
+    def write(self, tenant: str, cpt, vcaddr: int, nbytes: int,
+              repeat: int = 1) -> None:
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
+        lb = self.config.line_bytes
+        res = self._resident.setdefault(tenant, set())
+        for _ in range(repeat):
+            for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
+                self._check_mapped(cpt, line)
+                res.add(line)
+                self.ledger.charge(tenant, accesses=1, hits=1, noc=lb,
+                                   cache_write=lb)
+
+    # -- advanced semantics ----------------------------------------------
+    def bypass_read(self, tenant: str, nbytes: int, repeat: int = 1) -> None:
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
+        lines = (nbytes + self.config.line_bytes - 1) // self.config.line_bytes
+        self.ledger.charge(tenant, accesses=lines * repeat,
+                           dram_read=nbytes * repeat, noc=nbytes * repeat)
+
+    def bypass_write(self, tenant: str, nbytes: int, repeat: int = 1) -> None:
+        if repeat < 1:
+            raise NecError(f"repeat must be >= 1, got {repeat}")
+        self.ledger.charge(tenant, dram_write=nbytes * repeat,
+                           noc=nbytes * repeat)
+
+    def multicast_read(self, tenant: str, cpt, vcaddr: int,
+                       nbytes: int, group_size: int) -> int:
+        if group_size < 1:
+            raise NecError("multicast group must be >= 1")
+        lb = self.config.line_bytes
+        res = self._resident.setdefault(tenant, set())
+        missed = 0
+        for line in range(self._line(vcaddr), vcaddr + nbytes, lb):
+            self._check_mapped(cpt, line)
+            if line in res:
+                self.ledger.charge(tenant, accesses=1, hits=1, cache_read=lb,
+                                   noc=lb * group_size)
+            else:
+                missed += lb
+                res.add(line)
+                self.ledger.charge(tenant, accesses=1, dram_read=lb,
+                                   cache_write=lb, cache_read=lb,
+                                   noc=lb * group_size)
+        return missed
+
+    def multicast_bypass_read(self, tenant: str, nbytes: int,
+                              group_size: int) -> None:
+        if group_size < 1:
+            raise NecError("multicast group must be >= 1")
+        self.ledger.charge(tenant, dram_read=nbytes, noc=nbytes * group_size)
