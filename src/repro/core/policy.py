@@ -100,7 +100,12 @@ def charge_and_plan(task, cand: MappingCandidate,
     to one dict hit plus the (mandatory, per-execution) ledger charge.
     Keyed on ``id(cand)``, which is stable for the policy's lifetime —
     candidates are pinned by the model mappings the driving sim/server
-    holds at least as long as it holds the policy."""
+    holds at least as long as it holds the policy.
+
+    The ledger charge goes through :meth:`TenantTask.charge`, which
+    folds in the task's ``charge_repeat`` (epoch-granular serving: one
+    grant covering K decode steps charges once with repeat=K).  The
+    returned ExecutionPlan always prices a SINGLE execution."""
     key = None
     if cache is not None:
         key = (task.model.graph.name, task.layer_idx, id(cand),
@@ -108,7 +113,7 @@ def charge_and_plan(task, cand: MappingCandidate,
         hit = cache.get(key)
         if hit is not None:
             plan, charge = hit
-            task.nec.ledger.charge_bulk(task.id, *charge)
+            task.charge(charge)
             return plan
     rd, wr = split_layer_traffic(task, cand)
     access = task.model.stream_bytes[task.layer_idx]
@@ -118,7 +123,7 @@ def charge_and_plan(task, cand: MappingCandidate,
     plan = ExecutionPlan(compute_s, rd, wr, access)
     if key is not None:
         cache[key] = (plan, charge)
-    task.nec.ledger.charge_bulk(task.id, *charge)
+    task.charge(charge)
     return plan
 
 

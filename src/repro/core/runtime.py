@@ -96,6 +96,13 @@ class TenantTask:
         self.model = model
         self.cache = cache
         self.nec = nec
+        # Epoch-granular serving: how many identical executions of the
+        # current layer the next grant covers.  A serving loop that holds
+        # one grant for a K-step decode epoch sets this to K so the
+        # block's NEC traffic is charged ONCE with repeat=K — exactly the
+        # counters of K sequential charges — instead of re-running the
+        # scheduler per token.  The simulator leaves it at 1.
+        self.charge_repeat: int = 1
         if isinstance(policy, DynamicCacheAllocator):
             policy = CamdnPolicy(policy)
         self.policy: CachePolicy = policy
@@ -146,6 +153,18 @@ class TenantTask:
             self._held_pages.extend(granted)
             self.cpt.map_pages(granted, base_vcpn=base)
         return self.policy.on_grant(self, now)
+
+    def charge(self, charge: Tuple[int, int, int, int, int]) -> None:
+        """Charge one layer execution through the NEC ledger, folded by
+        :attr:`charge_repeat`: the single point where epoch-granular
+        serving multiplies a per-execution charge tuple (dram_read,
+        dram_write, noc, hits, accesses) into the K executions the
+        current grant covers.  Bulk layer pricing is linear in the
+        repeat count, so this is bit-identical to K individual calls."""
+        rep = self.charge_repeat
+        if rep != 1:
+            charge = tuple(c * rep for c in charge)
+        self.nec.ledger.charge_bulk(self.id, *charge)
 
     # ------------------------------------------------------------------
     def end_layer(self, now: float) -> None:

@@ -69,23 +69,34 @@ def _cache_shardings(mesh, caches_sds, batch: int, mode: str = "minor"):
     def spec_for(leaf):
         nd = leaf.ndim
         s: list = [None] * nd
-        if nd >= 2 and leaf.shape[1] == batch and batch % data == 0:
-            s[1] = "data"
+        # deep stacks carry stacked [G, B, ...] leaves (batch at axis 1);
+        # shallow stacks use per-group tuple caches whose leaves are
+        # [B, ...] (batch at axis 0) — locate the batch axis, don't
+        # assume the stacked layout
+        b_ax = None
+        if nd >= 2 and leaf.shape[1] == batch:
+            b_ax = 1
+        elif nd >= 1 and leaf.shape[0] == batch:
+            b_ax = 0
+        if b_ax is not None and batch % data == 0:
+            s[b_ax] = "data"
+        # axes past the batch axis are eligible for model/data sharding
+        lo = (b_ax + 1) if b_ax is not None else 1
         if mode == "seq":
             best, bi = 0, None
-            for i in range(1, nd):
+            for i in range(lo, nd):
                 if s[i] is None and leaf.shape[i] % model == 0 and leaf.shape[i] > best:
                     best, bi = leaf.shape[i], i
             if bi is not None and best >= model:
                 s[bi] = "model"
         else:
-            for i in range(nd - 1, 1, -1):
+            for i in range(nd - 1, lo - 1, -1):
                 if s[i] is None and leaf.shape[i] % model == 0 and leaf.shape[i] >= model:
                     s[i] = "model"
                     break
-        if nd >= 2 and s[1] is None:
+        if b_ax is not None and s[b_ax] is None:
             best, bi = 0, None
-            for i in range(1, nd):
+            for i in range(lo, nd):
                 if s[i] is None and leaf.shape[i] % data == 0 and leaf.shape[i] > best:
                     best, bi = leaf.shape[i], i
             if bi is not None:

@@ -5,12 +5,41 @@ is described as a small :class:`~repro.core.types.ModelGraph` and mapped
 by the *same* offline machinery the simulator uses
 (:class:`~repro.core.runtime.TenantModel` -> per-layer MCTs with LWM
 candidates at every usage limit + the fused-block LBM candidate), and
-the per-step scheduling runs the same
+the per-epoch scheduling runs the same
 :class:`~repro.core.runtime.TenantTask` state machine under a
 :class:`~repro.core.policy.CamdnPolicy` — the serving loop and the
 simulator share one CachePolicy runtime:
 
   pages granted -> candidate (LBM fused kernel vs LWM tiles) -> decode.
+
+The execution side is pipelined around **scheduling epochs**:
+
+* **Epoch-granted scan decode.**  A CaMDN grant is held for a window of
+  ``epoch_len`` decode steps, and the window executes as ONE on-device
+  ``jax.lax.scan`` over the static KernelPlan
+  (:func:`repro.models.transformer.decode_epoch`), amortizing jit
+  dispatch and Python scheduling from per-token to per-epoch.  The KV /
+  SSM caches are donated (``donate_argnums``), so XLA updates them in
+  place across the epoch.  The block's NEC traffic is charged once with
+  ``repeat=K`` (:attr:`TenantTask.charge_repeat`) — bit-identical
+  counters to charging every step.
+* **Plan-bucketed batching.**  Tenants sharing an (arch, KernelPlan)
+  pair stack along a leading tenant axis and decode as one vmapped
+  device call — one compile-cache entry and one dispatch serve the
+  whole bucket.
+* **One-epoch-ahead host/device overlap.**  The whole epoch launches as
+  ONE fused jit call (every tenant's epoch scan an independent subgraph
+  of a single XLA computation), and CaMDN selection, NEC charging, and
+  plan lowering for epoch s+1 run while epoch s is still executing on
+  device: JAX dispatch is asynchronous and the loop never pulls a
+  device value — tokens and caches stay on device, and results are
+  fetched once after the last epoch.
+
+``pipeline=False`` keeps the serial reference loop (one scheduled,
+charged, dispatched step per token); its outputs are bit-identical to
+the pipelined loop and it is the baseline the serving benchmark
+(``benchmarks/run.py`` -> ``BENCH_serve.json``) measures speedup
+against.
 
 On CPU this runs reduced models with the interpret-mode kernels; on TPU
 the same loop binds to the compiled kernel variants.  The allocation
@@ -85,12 +114,18 @@ class Tenant:
     cfg: ArchConfig
     params: Any
     caches: Any
-    decode: Any
+    decode: Any        # one-step jit (serial reference path)
     task: TenantTask
+    token: Any         # [B, 1] int32 device array: next input (feedback)
+    enc: Any = None    # encdec: fixed encoder output, built once
     index: int = 0
     tokens_served: int = 0
+    epochs_served: int = 0
     choices: List[str] = dataclasses.field(default_factory=list)
     plans: List[KernelPlan] = dataclasses.field(default_factory=list)
+    # decoded tokens, one [B, k] device array per epoch — fetched to the
+    # host only once, after the serving loop finishes
+    outputs: List[Any] = dataclasses.field(default_factory=list)
 
 
 class MultiTenantServer:
@@ -98,15 +133,23 @@ class MultiTenantServer:
 
     ``qos_targets`` (tenant-id suffix -> seconds/token) switches the
     round-robin to deadline-aware scheduling (paper Fig. 9 experiment,
-    serving side): the tenant with the worst QoS slack is served first,
-    and its allocator request is tried before anyone else touches the
-    page pool — CaMDN integrated with an AuRORA-style priority policy.
+    serving side): the tenant with the worst QoS slack is scheduled
+    first, and its allocator request is tried before anyone else touches
+    the page pool — CaMDN integrated with an AuRORA-style priority
+    policy.
+
+    ``epoch_len`` is K, the number of decode steps one grant covers;
+    ``pipeline=False`` selects the serial reference loop (per-step
+    scheduling, charging, and dispatch — the pre-pipeline behaviour).
     """
 
     def __init__(self, arch_ids: List[str], batch: int = 2,
                  max_len: int = 128, total_pages: int = VMEM_PAGES,
-                 qos_targets: Optional[Dict[str, float]] = None):
+                 qos_targets: Optional[Dict[str, float]] = None,
+                 epoch_len: int = 8, pipeline: bool = True):
         self.qos_targets = qos_targets or {}
+        self.epoch_len = max(1, int(epoch_len))
+        self.pipeline = bool(pipeline)
         # VMEM page pool modeled by the same SharedCache/allocator the
         # simulator uses — one CacheConfig with page-granular VMEM
         # the whole pool is CaMDN-schedulable VMEM (XLA's reserved slice
@@ -121,19 +164,62 @@ class MultiTenantServer:
         self.mapper = _vmem_mapper(total_pages)
         self.tenants: List[Tenant] = []
         self.batch = batch
+        self.max_len = max_len
+        # jitted one-step functions are shared per arch so same-arch
+        # tenants hit one compile cache (the pipelined path compiles
+        # through _fused_epoch_fn instead)
+        step_fns: Dict[str, Any] = {}
         for i, aid in enumerate(arch_ids):
             cfg = get_arch(aid).reduced()
             params = M.init_params(cfg, jax.random.PRNGKey(i))
             caches = init_caches(params, cfg, batch, max_len)
-            # plan is static: each (tenant, plan) pair compiles once and
-            # is cached; the grant decides which kernels the step runs
-            dec = jax.jit(M.make_decode_step(cfg), static_argnames=("plan",))
+            if cfg.name not in step_fns:
+                # plan is static: each (arch, plan) pair compiles once
+                # and is cached; the grant decides which kernels run
+                step_fns[cfg.name] = jax.jit(
+                    M.make_decode_step(cfg),
+                    static_argnames=("plan", "kv_len"))
             tid = f"t{i}:{aid}"
             tm = TenantModel(_ffn_graph(aid, cfg, seq_block=batch),
                              self.mapper)
             self._align_lbm_to_vmem(tm, cfg)
             task = TenantTask(tid, tm, self.cache, self.nec, self.policy)
-            self.tenants.append(Tenant(tid, cfg, params, caches, dec, task))
+            enc = (jnp.zeros((batch, cfg.enc_len, cfg.d_model), cfg.jdtype)
+                   if cfg.family == "encdec" else None)
+            token = jnp.full((batch, 1), i % cfg.vocab_size, jnp.int32)
+            self.tenants.append(Tenant(
+                tid, cfg, params, caches, step_fns[cfg.name], task,
+                token=token, enc=enc))
+        # ---- plan-bucketed batching ---------------------------------
+        # tenants grouped by arch; a group whose members were granted
+        # the SAME KernelPlan for an epoch decodes as one vmapped call
+        # over tenant-stacked params/caches/tokens.  Params are stacked
+        # once here; the stacked caches persist in _bucket_caches while
+        # the bucket holds.
+        self._groups: Dict[str, List[Tenant]] = {}
+        for t in self.tenants:
+            self._groups.setdefault(t.cfg.name, []).append(t)
+        self._batched: Dict[str, Any] = {}   # arch -> stacked params
+        for name, ts in self._groups.items():
+            if len(ts) >= 2:
+                self._batched[name] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *[t.params for t in ts])
+        # un-jitted epoch cores per arch, composed into the one fused
+        # per-epoch device call (_fused_epoch_fn); jitted per distinct
+        # (work-item structure, plans, k) combination and cached
+        self._epoch_cores: Dict[str, Any] = {
+            name: M.make_decode_epoch(ts[0].cfg)
+            for name, ts in self._groups.items()}
+        self._batched_cores: Dict[str, Any] = {
+            name: M.make_decode_epoch_batched(ts[0].cfg)
+            for name in self._batched}
+        self._fused_jits: Dict[Tuple, Any] = {}
+        # persistent tenant-stacked caches per bucketed arch group: the
+        # stacked buffer stays stacked (and donated) across epochs while
+        # the bucket holds, instead of an O(cache bytes) restack/slice
+        # round-trip per epoch; it is unstacked back into the tenants
+        # only when the bucket breaks or the run ends
+        self._bucket_caches: Dict[str, Any] = {}
 
     def _align_lbm_to_vmem(self, tm: TenantModel, cfg: ArchConfig) -> None:
         """Make the LBM candidates quote the *fused kernel's* VMEM
@@ -159,13 +245,16 @@ class MultiTenantServer:
         tm.mapping = ModelMapping(tm.mapping.model_name, mcts,
                                   tm.mapping.blocks)
 
+    # ------------------------------------------------------ scheduling --
     def _schedule_block(self, t: Tenant, now: float
                         ) -> List[Tuple[Selection, int]]:
         """Run the tenant's FFN block through the unified TenantTask
         state machine: select -> (timeout-downgrade)* -> grant -> end,
-        charging traffic through the NEC ledger.  Returns, per layer,
-        the final Selection and the pages actually held at execution —
-        the inputs the KernelPlan lowering consumes."""
+        charging traffic through the NEC ledger (folded by the task's
+        ``charge_repeat`` when the grant covers a whole epoch).
+        Returns, per layer, the final Selection and the pages actually
+        held at execution — the inputs the KernelPlan lowering
+        consumes."""
         task = t.task
         if task.done:
             task.reset_for_next_inference()
@@ -181,8 +270,13 @@ class MultiTenantServer:
                 granted = self.cache.alloc(t.tid, task.pages_to_request())
                 attempts += 1
             if granted is None:
-                # starved: stream the layer with whatever is already held
-                sel = Selection(task.mct().lwms[0], 0, now)
+                # starved: stream the layer with whatever is already
+                # held.  Pick the minimum-footprint LWM explicitly
+                # (min over p_need, not positional lwms[0]) so a
+                # starved tenant never streams through a mid-sized tile
+                # it holds no pages for.
+                smallest = min(task.mct().lwms, key=lambda m: m.p_need)
+                sel = Selection(smallest, 0, now)
                 task.selection = sel
                 granted = []
             task.start_execution(now, granted)
@@ -209,35 +303,218 @@ class MultiTenantServer:
             dtype_bytes=_elem_bytes(cfg), head_dim=cfg.hd,
             ssm_chunk=cfg.ssm_chunk, down_pages=down_pages)
 
-    def _serve_one(self, t: Tenant, now: float) -> None:
-        # --- CaMDN selection for this tenant's layer block ------------
-        sched = self._schedule_block(t, now)
-
-        # --- lower the grant into the executable KernelPlan -----------
+    def _schedule_epoch(self, t: Tenant, now: float,
+                        k: int) -> Optional[KernelPlan]:
+        """CaMDN selection + NEC charging for one tenant's epoch: the
+        grant is held for the whole K-step window, so the block's
+        traffic is charged once with repeat=K (bit-identical counters to
+        per-step charging).  Returns the plan the epoch executes (None
+        for SSM decode, whose O(1) recurrent step has no dense FFN — the
+        plan only affects prefill there, so we skip the per-plan decode
+        recompile)."""
+        t.task.charge_repeat = k
+        try:
+            sched = self._schedule_block(t, now)
+        finally:
+            t.task.charge_repeat = 1
         plan = self._lower_plan(t, sched)
         t.plans.append(plan)
-        # SSM decode is O(1)-recurrent (no dense FFN): the plan only
-        # affects prefill there, so skip the per-plan decode recompile
-        dec_plan: Optional[KernelPlan] = (
-            plan if t.cfg.family != "ssm" else None)
+        return self._dec_plan(t, plan)
 
-        # --- real decode step through the plan's kernels --------------
-        token = jnp.full((self.batch, 1), t.index % t.cfg.vocab_size,
-                         jnp.int32)
-        if t.cfg.family == "encdec":
-            enc = jnp.zeros((self.batch, t.cfg.enc_len, t.cfg.d_model),
-                            t.cfg.jdtype)
-            nxt, t.caches = t.decode(t.params, t.caches, token,
-                                     jnp.int32(t.index), enc,
-                                     plan=dec_plan)
+    def _dec_plan(self, t: Tenant, plan: KernelPlan) -> Optional[KernelPlan]:
+        """The plan actually bound (statically) to the decode step.
+        SSM decode is O(1)-recurrent — no dense FFN — and MoE decode
+        routes its one token through the gathered-expert fast path
+        (``moe._decode_moe``): a mapping plan has no tiling freedom at
+        M=1, so neither family's decode recompiles per plan.  The grant
+        still governs their prefill kernels, the NEC charging, and the
+        recorded plan trace; dense/hybrid/encdec decode executes the
+        plan-lowered FFN kernels as before."""
+        if t.cfg.family == "ssm" or t.cfg.is_moe:
+            return None
+        return plan
+
+    def _plan_epoch(self, now: float, k: int) -> List[Tuple]:
+        """Host-side scheduling for one epoch: select + charge every
+        tenant's block (worst QoS slack first — first claim on the page
+        pool), then bucket tenants whose (arch, plan) coincide into
+        single batched decode calls.  Pure host work: runs one epoch
+        ahead of the device."""
+        order = self.tenants
+        if self.qos_targets:
+            order = sorted(self.tenants, key=lambda t: self._slack(t, now))
+        plans: Dict[str, Optional[KernelPlan]] = {}
+        for t in order:
+            plans[t.tid] = self._schedule_epoch(t, now, k)
+        work: List[Tuple] = []
+        seen = set()
+        for t in self.tenants:
+            if t.tid in seen:
+                continue
+            group = self._groups[t.cfg.name]
+            gplans = [plans[g.tid] for g in group]
+            if (t.cfg.name in self._batched
+                    and all(p == gplans[0] for p in gplans)
+                    and len({g.index for g in group}) == 1):
+                work.append(("bucket", group, gplans[0], k))
+                seen.update(g.tid for g in group)
+            else:
+                self._unstack_bucket(t.cfg.name)
+                work.append(("single", t, plans[t.tid], k))
+                seen.add(t.tid)
+        return work
+
+    # ------------------------------------------------------- execution --
+    def _unstack_bucket(self, name: str) -> None:
+        """Materialize a held stacked-bucket cache back into its
+        tenants (bucket broke, or the run is handing caches back)."""
+        stacked = self._bucket_caches.pop(name, None)
+        if stacked is None:
+            return
+        for i, g in enumerate(self._groups[name]):
+            g.caches = jax.tree_util.tree_map(lambda x, i=i: x[i], stacked)
+
+    def _advance(self, t: Tenant, k: int) -> None:
+        t.index += k
+        t.tokens_served += self.batch * k
+        t.epochs_served += 1
+
+    def _kv_len(self, upto: int) -> int:
+        """Static attention-read bound for decode indices < ``upto``:
+        the live cache prefix rounded up to the KV window step (one MXU
+        lane tile), clamped to the allocated cache.  Rounding keeps the
+        number of distinct compiled shapes at max_len/LANE, and the
+        window step is shared by the serial reference and the epoch
+        scan so corresponding steps see identical attention shapes
+        (bit-exact parity)."""
+        return min(self.max_len, -(-max(1, upto) // LANE) * LANE)
+
+    def _fused_epoch_fn(self, work: List[Tuple]):
+        """One jitted device program for the WHOLE epoch: every work
+        item's epoch scan (single-tenant or vmapped bucket) becomes an
+        independent subgraph of a single XLA computation, so one
+        dispatch replaces n_tenants calls and the CPU/TPU runtime is
+        free to overlap the independent tenant subgraphs.  Jitted per
+        distinct (item structure, plans, k) key and cached — in steady
+        state the grants repeat and every epoch is a cache hit."""
+        def item_kv(item):
+            t0 = item[1][0] if item[0] == "bucket" else item[1]
+            return self._kv_len(t0.index + item[3])
+
+        key = tuple(
+            (item[0], (item[1][0].cfg.name if item[0] == "bucket"
+                       else item[1].cfg.name), item[2], item[3],
+             item_kv(item))
+            for item in work)
+        fn = self._fused_jits.get(key)
+        if fn is not None:
+            return fn
+        cores = []
+        for item in work:
+            kind, target, plan, k = item
+            if kind == "bucket":
+                core = self._batched_cores[target[0].cfg.name]
+            else:
+                core = self._epoch_cores[target.cfg.name]
+            cores.append((core, plan, k, item_kv(item)))
+
+        def fused(params_list, caches_list, token_list, index_list,
+                  enc_list):
+            toks_out, caches_out = [], []
+            for (core, plan, k, kv), p, c, tok, idx, enc in zip(
+                    cores, params_list, caches_list, token_list,
+                    index_list, enc_list):
+                toks, nc = core(p, c, tok, idx, enc, plan=plan, k=k,
+                                kv_len=kv)
+                toks_out.append(toks)
+                caches_out.append(nc)
+            return toks_out, caches_out
+
+        fn = jax.jit(fused, donate_argnums=(1,))
+        self._fused_jits[key] = fn
+        return fn
+
+    def _dispatch_epoch(self, work: List[Tuple]) -> None:
+        """Launch one epoch's decode as ONE fused device call.  All
+        device work: the call is dispatched asynchronously and nothing
+        here blocks on a device value — tokens and caches stay on
+        device."""
+        if not work:
+            return
+        fn = self._fused_epoch_fn(work)
+        params_list, caches_list, token_list, index_list, enc_list = (
+            [], [], [], [], [])
+        for item in work:
+            if item[0] == "bucket":
+                group = item[1]
+                name = group[0].cfg.name
+                params_list.append(self._batched[name])
+                stacked = self._bucket_caches.pop(name, None)
+                if stacked is None:
+                    stacked = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs),
+                        *[g.caches for g in group])
+                caches_list.append(stacked)
+                token_list.append(jnp.stack([g.token for g in group]))
+                index_list.append(
+                    jnp.asarray([g.index for g in group], jnp.int32))
+                enc_list.append(jnp.stack([g.enc for g in group])
+                                if group[0].enc is not None else None)
+            else:
+                t = item[1]
+                params_list.append(t.params)
+                caches_list.append(t.caches)
+                token_list.append(t.token)
+                index_list.append(jnp.int32(t.index))
+                enc_list.append(t.enc)
+        toks_list, new_caches = fn(params_list, caches_list, token_list,
+                                   index_list, enc_list)
+        for item, toks, caches in zip(work, toks_list, new_caches):
+            if item[0] == "bucket":
+                _, group, _, k = item
+                # keep the bucket's caches STACKED for the next epoch;
+                # tenants get their slices back when the bucket breaks
+                self._bucket_caches[group[0].cfg.name] = caches
+                for i, g in enumerate(group):
+                    g.token = toks[i, :, -1:]
+                    g.outputs.append(toks[i])
+                    self._advance(g, k)
+            else:
+                _, t, _, k = item
+                t.caches = caches
+                t.token = toks[:, -1:]
+                t.outputs.append(toks)
+                self._advance(t, k)
+
+    def _serve_one_step(self, t: Tenant, now: float) -> None:
+        """Serial reference: schedule, charge, lower, and dispatch ONE
+        decode step (the pre-pipeline loop, kept as the measured
+        baseline and the bit-exactness oracle)."""
+        sched = self._schedule_block(t, now)
+        plan = self._lower_plan(t, sched)
+        t.plans.append(plan)
+        dec_plan = self._dec_plan(t, plan)
+        kv = self._kv_len(t.index + 1)
+        if t.enc is not None:
+            nxt, t.caches = t.decode(t.params, t.caches, t.token,
+                                     jnp.int32(t.index), t.enc,
+                                     plan=dec_plan, kv_len=kv)
         else:
-            nxt, t.caches = t.decode(t.params, t.caches, token,
-                                     jnp.int32(t.index), plan=dec_plan)
-        t.index += 1
-        t.tokens_served += self.batch
+            nxt, t.caches = t.decode(t.params, t.caches, t.token,
+                                     jnp.int32(t.index), plan=dec_plan,
+                                     kv_len=kv)
+        t.token = nxt[:, None]
+        t.outputs.append(nxt[:, None])
+        self._advance(t, 1)
 
     def _slack(self, t: Tenant, now: float) -> float:
-        """Seconds of budget headroom per token (negative = late)."""
+        """QoS slack as a fraction of the target rate (negative = late).
+
+        Until a tenant has completed its first epoch the slack is seeded
+        AT the target (0.0): the measured ``tokens/now`` rate is
+        0-or-huge near now=0 and made the ordering flap over the first
+        steps.  ``now`` is computed once per epoch by the caller, not
+        per tenant."""
         # most-specific match wins: the longest key matching the tenant
         # id (a bare arch suffix must not override an exact tenant key)
         target = None
@@ -247,35 +524,75 @@ class MultiTenantServer:
                 target, best_len = v, len(k)
         if target is None:
             return float("inf")
-        rate = t.tokens_served / max(now, 1e-6)
+        if t.tokens_served == 0 or now <= 0.0:
+            return 0.0
+        rate = t.tokens_served / now
         want = self.batch / target
         return (rate - want) / want
 
+    # ------------------------------------------------------------ run --
     def run(self, steps: int = 16) -> Dict[str, Any]:
         t0 = time.time()
-        for s in range(steps):
-            order = self.tenants
-            if self.qos_targets:
-                # deadline-aware: serve the most-behind tenant first —
-                # it also gets first claim on the page pool
-                now = time.time() - t0
-                order = sorted(self.tenants,
-                               key=lambda t: self._slack(t, now))
-            for t in order:
-                self._serve_one(t, now=time.time() - t0)
+        tokens_before = sum(t.tokens_served for t in self.tenants)
+        if self.pipeline:
+            # split the step budget into epochs of (at most) epoch_len
+            # that never straddle a KV-window boundary: every step of an
+            # epoch then shares one static kv_len, matching the serial
+            # reference's per-step window bit-for-bit
+            epochs = []
+            base = self.tenants[0].index if self.tenants else 0
+            done = 0
+            while done < steps:
+                k = min(self.epoch_len, steps - done,
+                        LANE - ((base + done) % LANE))
+                epochs.append(k)
+                done += k
+            pending = self._plan_epoch(0.0, epochs[0]) if epochs else []
+            for e in range(len(epochs)):
+                self._dispatch_epoch(pending)
+                if e + 1 < len(epochs):
+                    # one-epoch-ahead: epoch e is still executing on
+                    # device (async dispatch); schedule e+1 now
+                    pending = self._plan_epoch(time.time() - t0,
+                                               epochs[e + 1])
+        else:
+            for _ in range(steps):
+                now = time.time() - t0   # once per step, not per tenant
+                order = self.tenants
+                if self.qos_targets:
+                    order = sorted(self.tenants,
+                                   key=lambda t: self._slack(t, now))
+                for t in order:
+                    self._serve_one_step(t, now)
+        # hand bucketed caches back to their tenants, then fetch
+        # device values exactly once, after the last epoch
+        for name in list(self._bucket_caches):
+            self._unstack_bucket(name)
+        if self.tenants:
+            jax.block_until_ready([t.token for t in self.tenants])
         wall = time.time() - t0
+        served = sum(t.tokens_served for t in self.tenants) - tokens_before
         return {
             "tenants": {
                 t.tid: {"tokens": t.tokens_served,
                         "choices": t.choices[-4:],
                         "plans": [p.describe() for p in t.plans[-4:]],
-                        "lbm_frac": sum(c.startswith("LBM")
-                                        for c in t.choices) / len(t.choices)}
+                        "lbm_frac": (sum(c.startswith("LBM")
+                                         for c in t.choices)
+                                     / max(1, len(t.choices))),
+                        # full decoded history [B, total_steps], fetched
+                        # here (the loop itself never pulled a value)
+                        "output": (np.concatenate(
+                            [np.asarray(o) for o in t.outputs], axis=-1)
+                            if t.outputs else np.zeros((self.batch, 0),
+                                                       np.int32))}
                 for t in self.tenants
             },
+            "mode": "pipelined" if self.pipeline else "serial",
+            "epoch_len": self.epoch_len if self.pipeline else 1,
             "wall_s": wall,
             "dram_bytes": self.nec.traffic.dram_total,
-            "tokens_per_s": sum(t.tokens_served for t in self.tenants) / wall,
+            "tokens_per_s": served / wall if wall > 0 else 0.0,
         }
 
 
@@ -285,14 +602,21 @@ def main() -> None:
                     default=["yi-9b", "olmoe-1b-7b", "mamba2-370m"])
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--pages", type=int, default=128)
+    ap.add_argument("--epoch-len", type=int, default=8,
+                    help="decode steps per scheduling epoch (grant hold)")
+    ap.add_argument("--serial", action="store_true",
+                    help="serial reference loop (schedule+dispatch per step)")
     args = ap.parse_args()
-    srv = MultiTenantServer(args.archs, total_pages=args.pages)
+    srv = MultiTenantServer(args.archs, total_pages=args.pages,
+                            epoch_len=args.epoch_len,
+                            pipeline=not args.serial)
     out = srv.run(args.steps)
     for tid, info in out["tenants"].items():
         print(f"[serve] {tid}: {info['tokens']} tokens, "
               f"LBM {info['lbm_frac'] * 100:.0f}%, recent {info['choices']}, "
               f"plans {info['plans']}")
-    print(f"[serve] {out['tokens_per_s']:.1f} tok/s total, "
+    print(f"[serve] {out['mode']} (K={out['epoch_len']}): "
+          f"{out['tokens_per_s']:.1f} tok/s total, "
           f"{out['dram_bytes'] / 2**20:.1f} MB modeled DRAM")
 
 

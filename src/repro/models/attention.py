@@ -51,6 +51,7 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
         causal: bool = True,
         kv_cache: Optional[Dict[str, jnp.ndarray]] = None,
         cache_index: Optional[jnp.ndarray] = None,
+        kv_len: Optional[int] = None,
         xattn_kv: Optional[jnp.ndarray] = None,
         attn_plan: Optional[Any] = None,
         ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
@@ -58,7 +59,19 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
 
     x: [B, S, d].  Training/prefill: kv_cache None -> self-attention over
     x.  Decode: kv_cache {"k","v"} [B, L, Hkv, hd] + cache_index scalar
-    position -> one-step attention, returns the updated cache.
+    position -> one-step attention, returns the updated cache.  The
+    update is a single dynamic-update-slice on the caller's buffer, so
+    a donated cache (the serving epoch scan) is updated in place —
+    O(tokens written) per step, not O(cache bytes).
+
+    ``kv_len`` (static, decode only) bounds the attention read to the
+    cache's first kv_len positions: positions beyond the current index
+    are masked to -inf regardless, so a caller that knows an upper
+    bound on the index (the serving loop rounds it up to a fixed
+    window step) skips streaming the dead tail of a long max_len cache
+    through the score/context contractions — the reads drop from
+    O(max_len) to O(index) while the full cache buffer is still
+    carried and updated in place.  Requires cache_index < kv_len.
     Cross-attention: xattn_kv [B, L_enc, d] (keys/values from encoder;
     no cache update, no RoPE on k).
     ``attn_plan`` (core.plan.AttnPlan) routes causal prefill
@@ -82,10 +95,12 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
         k = apply_rope(k, positions, cfg.rope_theta)
         if kv_cache is not None:
             assert cache_index is not None
-            k = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, 0, axis=1) \
-                if False else kv_cache["k"].at[:, cache_index, :, :].set(k[:, 0])
+            k = kv_cache["k"].at[:, cache_index, :, :].set(k[:, 0])
             v = kv_cache["v"].at[:, cache_index, :, :].set(v[:, 0])
             new_cache = {"k": k, "v": v}
+            if kv_len is not None and kv_len < k.shape[1]:
+                k = jax.lax.slice_in_dim(k, 0, kv_len, axis=1)
+                v = jax.lax.slice_in_dim(v, 0, kv_len, axis=1)
             L = k.shape[1]
             kpos = jnp.arange(L)
             ok = kpos[None, :] <= cache_index

@@ -18,8 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.base import ArchConfig
-from repro.models.transformer import (decode_step, encode, init_caches,
-                                      init_lm, lm_forward)
+from repro.models.transformer import (decode_epoch, decode_step, encode,
+                                      init_caches, init_lm, lm_forward)
 from repro.optim import adamw
 
 
@@ -124,14 +124,70 @@ def make_prefill(cfg: ArchConfig):
     return prefill
 
 
+def _greedy_next_token(cfg: ArchConfig):
+    """Greedy decode feedback: logits [B, 1, V] -> next token [B]."""
+    def next_token(logits):
+        logits = mask_padded_logits(logits, cfg)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    return next_token
+
+
+def make_decode_epoch(cfg: ArchConfig):
+    """K-token serving epoch: one on-device lax.scan over the decode
+    step with greedy token feedback.  ``plan`` and ``k`` are static —
+    jit with ``static_argnames=("plan", "k")`` and
+    ``donate_argnums=(1,)`` so each (tenant, plan, k) triple compiles
+    once and the KV/SSM caches are updated in place across the epoch.
+    Returns (tokens [B, k], caches); bit-identical to k sequential
+    ``make_decode_step`` calls feeding each token back in."""
+    next_token = _greedy_next_token(cfg)
+
+    def serve_decode_epoch(params, caches, token, index, enc_out=None,
+                           plan=None, k=1, kv_len=None):
+        return decode_epoch(params, token, caches, index, cfg, k,
+                            next_token_fn=next_token, enc_out=enc_out,
+                            plan=plan, kv_len=kv_len)
+    return serve_decode_epoch
+
+
+def make_decode_epoch_batched(cfg: ArchConfig):
+    """Plan-bucketed batched epoch: tenants of one arch sharing a
+    KernelPlan stack along a leading tenant axis and decode as ONE
+    device call (``jax.vmap`` of the epoch scan), so one compile-cache
+    entry serves the whole bucket and one dispatch replaces
+    n_tenants x k step dispatches.
+
+    params / caches / token / index all carry a leading tenant axis
+    ([n, ...]); ``enc_out`` (when given) too.  Returns
+    (tokens [n, B, k], caches [n, ...]); each tenant slice is
+    bit-identical to its unbatched epoch (tests/test_serve_pipeline.py).
+    """
+    next_token = _greedy_next_token(cfg)
+
+    def serve_decode_epoch_batched(params, caches, token, index,
+                                   enc_out=None, plan=None, k=1,
+                                   kv_len=None):
+        def one(params, caches, token, index, enc_out):
+            return decode_epoch(params, token, caches, index, cfg, k,
+                                next_token_fn=next_token, enc_out=enc_out,
+                                plan=plan, kv_len=kv_len)
+        enc_axis = None if enc_out is None else 0
+        return jax.vmap(one, in_axes=(0, 0, 0, 0, enc_axis)
+                        )(params, caches, token, index, enc_out)
+    return serve_decode_epoch_batched
+
+
 def make_decode_step(cfg: ArchConfig):
     """One-token serving step.  ``plan`` is a static
     core.plan.KernelPlan: jit it with ``static_argnames=("plan",)`` so
     each (tenant, plan) pair compiles once and the allocator's grant
-    decides which Pallas kernel variant the step executes."""
-    def serve_decode(params, caches, token, index, enc_out=None, plan=None):
+    decides which Pallas kernel variant the step executes.  ``kv_len``
+    (static) bounds the attention read to the cache's live prefix."""
+    def serve_decode(params, caches, token, index, enc_out=None, plan=None,
+                     kv_len=None):
         logits, caches = decode_step(params, token, caches, index, cfg,
-                                     enc_out=enc_out, plan=plan)
+                                     enc_out=enc_out, plan=plan,
+                                     kv_len=kv_len)
         logits = mask_padded_logits(logits, cfg)
         return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), caches
     return serve_decode

@@ -38,6 +38,46 @@ def capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
     return max(4, -(-c // 4) * 4)  # pad to a multiple of 4
 
 
+def _decode_moe(params: Params, x: jnp.ndarray, top_p: jnp.ndarray,
+                top_e: jnp.ndarray) -> jnp.ndarray:
+    """Token-granular (T == 1) expert combine: gather the top-k
+    experts' weights and run their SwiGLU directly.
+
+    The sort/scatter dispatch below exists to pack many tokens into
+    per-expert capacity buckets; for the one token per group a decode
+    step carries it is pure overhead (argsort + searchsorted + two
+    scatters ~4x the cost of the expert math itself — the serving-loop
+    hot path).  With one token no expert can exceed capacity (each
+    chosen expert receives exactly one entry), so the ROUTING semantics
+    are exact: the same experts contribute with the same weights.  The
+    float summation differs from the bucket path in the last bit — the
+    combine here accumulates the K contributions in top-k order (the
+    bucket path's scatter-add runs in expert-id order and in x.dtype) —
+    so decode logits are not guaranteed bit-identical to the bucket
+    path; every serving-loop bit-exactness contract is between loops
+    that BOTH use this path (serial reference vs pipelined).
+
+    This path deliberately ignores the KernelPlan: a one-token expert
+    FFN is a GEMV with no tiling/fusion freedom, so there is nothing
+    for a grant to change at M=1 (the serving loop consequently binds
+    plan=None to MoE decode and skips the per-plan recompile — see
+    ``launch/serve.py::_dec_plan``).  MoE *prefill* (T > 1) still
+    lowers each expert's SwiGLU through the plan-lowered kernels."""
+    wg = params["gate"][top_e[:, 0]]                  # [G, K, d, f]
+    wu = params["up"][top_e[:, 0]]
+    wd = params["down"][top_e[:, 0]]
+    xt = x[:, 0]                                      # [G, d]
+    h_g = jnp.einsum("gd,gkdf->gkf", xt, wg,
+                     preferred_element_type=jnp.float32)
+    h_u = jnp.einsum("gd,gkdf->gkf", xt, wu,
+                     preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(h_g) * h_u).astype(x.dtype)
+    out = jnp.einsum("gkf,gkfd->gkd", h, wd,
+                     preferred_element_type=jnp.float32)
+    w = top_p[:, 0, :, None].astype(out.dtype)        # [G, K, 1]
+    return (out * w).sum(1)[:, None, :].astype(x.dtype)
+
+
 def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
               plan: Optional[Any] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -48,6 +88,8 @@ def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
     gather-combine with router weights.  With ``plan`` (a
     core.plan.FfnPlan) each expert's SwiGLU runs through the
     plan-lowered Pallas kernels instead of the batched einsums.
+    Decode-shaped calls (T == 1) skip the capacity buckets entirely —
+    see :func:`_decode_moe`.
     """
     G, T, d = x.shape
     E, K = cfg.num_experts, cfg.experts_per_token
@@ -64,6 +106,9 @@ def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
     ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
         1.0 / (G * T * K))
     aux = E * jnp.sum(me * ce)
+
+    if T == 1:
+        return _decode_moe(params, x, top_p, top_e), aux
 
     def dispatch_group(xg, eg, pg):
         # xg [T,d]; eg,pg [T,K]

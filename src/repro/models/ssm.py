@@ -163,7 +163,13 @@ def mamba2_forward(params: Params, x: jnp.ndarray, cfg: ArchConfig,
 def ssd_decode_step(params: Params, x: jnp.ndarray, cfg: ArchConfig,
                     state: Dict[str, jnp.ndarray]
                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """O(1) recurrent step.  x: [b, 1, d]; state {conv, ssm}."""
+    """O(1) recurrent step.  x: [b, 1, d]; state {conv, ssm}.
+
+    The returned state is pinned to the input state's dtypes: the
+    serving path scans this step over a K-token epoch with the state as
+    a donated carry, and a carry whose dtype drifts (e.g. an f32
+    accumulation escaping into a bf16 conv window) would break both the
+    scan signature and in-place donation."""
     b, _, d = x.shape
     di, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     zxbcdt = linear(params["in_proj"], x)
@@ -184,7 +190,9 @@ def ssd_decode_step(params: Params, x: jnp.ndarray, cfg: ArchConfig,
     y = jnp.einsum("bn,bhnp->bhp", Cf, h) + params["D"][None, :, None] * xh
     y = y.reshape(b, 1, di).astype(x.dtype)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
-    return linear(params["out_proj"], y), {"conv": new_conv, "ssm": h}
+    return linear(params["out_proj"], y), {
+        "conv": new_conv.astype(state["conv"].dtype),
+        "ssm": h.astype(state["ssm"].dtype)}
 
 
 def init_ssm_state(cfg: ArchConfig, batch: int) -> Dict[str, jnp.ndarray]:

@@ -32,6 +32,11 @@ from repro.models.ssm import (init_mamba2, init_ssm_state, mamba2_forward,
 # body once regardless of trip count; see launch/hlo_analysis.py).
 _SCAN_UNROLL = 1
 _REMAT_POLICY = "full"   # "full" | "dots" (save matmul outputs)
+# Decode-path group loop: stacks this shallow are unrolled to
+# straight-line code so cache writes are in-place dynamic-update-slices
+# on the carried buffer (see decode_step docstring); deeper stacks keep
+# the compact scan-over-layers HLO.
+_DECODE_UNROLL_MAX_GROUPS = 8
 
 
 def set_scan_unroll(u: int) -> None:
@@ -113,11 +118,12 @@ def init_lm(key, cfg: ArchConfig) -> Params:
 
 # ------------------------------------------------------------- blocks --
 def _dense_block(p: Params, x, cfg: ArchConfig, *, causal=True, kv_cache=None,
-                 cache_index=None, positions=None, xattn_kv=None, xp=None,
-                 plan=None):
+                 cache_index=None, kv_len=None, positions=None, xattn_kv=None,
+                 xp=None, plan=None):
     h, new_cache = mha(p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps), cfg,
                        causal=causal, kv_cache=kv_cache,
-                       cache_index=cache_index, positions=positions,
+                       cache_index=cache_index, kv_len=kv_len,
+                       positions=positions,
                        attn_plan=plan.attn if plan is not None else None)
     x = x + h
     aux = 0.0
@@ -230,7 +236,16 @@ def encode(params: Params, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
 
 # -------------------------------------------------------------- decode --
 def init_caches(params: Params, cfg: ArchConfig, batch: int, max_len: int):
-    """Stacked per-group decode caches."""
+    """Per-group decode caches.
+
+    Shallow stacks (<= ``_DECODE_UNROLL_MAX_GROUPS`` groups — every
+    ``reduced()`` serving config) get a TUPLE of independent per-group
+    buffers: the unrolled decode path updates each group's KV/SSM state
+    with one in-place dynamic-update-slice on its own carry leaf, and
+    attention reads the buffer directly — no group-axis slicing, no
+    re-stacking, so a donated epoch scan's per-step cache cost is
+    O(tokens written) instead of O(cache bytes).  Deep stacks keep the
+    single stacked array the compact scan-over-layers decode consumes."""
     G = num_groups(cfg)
 
     def one(_):
@@ -242,49 +257,133 @@ def init_caches(params: Params, cfg: ArchConfig, batch: int, max_len: int):
             return init_ssm_state(cfg, batch)
         return init_kv_cache(cfg, batch, max_len)
 
+    if G <= _DECODE_UNROLL_MAX_GROUPS:
+        return tuple(one(None) for _ in range(G))
     return jax.vmap(one)(jnp.arange(G))
+
+
+def decode_epoch(params: Params, token: jnp.ndarray, caches,
+                 index: jnp.ndarray, cfg: ArchConfig, k: int, *,
+                 next_token_fn,
+                 enc_out: Optional[jnp.ndarray] = None,
+                 plan=None, kv_len: Optional[int] = None
+                 ) -> Tuple[jnp.ndarray, Any]:
+    """K decode steps as ONE on-device ``lax.scan`` over
+    :func:`decode_step` — the epoch-granted serving path.
+
+    Per-token Python scheduling and ``jit`` dispatch amortize from
+    per-step to per-epoch: the scan body compiles once per (plan, k)
+    and the carry (token, caches, position) never leaves the device.
+    ``next_token_fn(logits) -> [B] int32`` closes the feedback loop
+    (greedy argmax in serving; anything sample-like works as long as it
+    is a pure function of the logits).  The cache pytree is a
+    donation-safe carry: :func:`decode_step` returns caches with the
+    exact structure/shape/dtype it consumed, so callers can
+    ``jax.jit(..., donate_argnums=...)`` the caches argument and XLA
+    updates the KV/SSM buffers in place across the whole epoch.
+
+    token: [B, 1] int32 (the first input token); index: starting
+    position.  Returns (tokens [B, k] — the k decoded tokens — and the
+    updated caches).  Bit-identical to k sequential decode_step calls
+    feeding each output token back in (tests/test_serve_pipeline.py).
+    """
+    def step(carry, _):
+        tok, caches, idx = carry
+        logits, caches = decode_step(params, tok, caches, idx, cfg,
+                                     enc_out=enc_out, plan=plan,
+                                     kv_len=kv_len)
+        nxt = next_token_fn(logits)
+        return (nxt[:, None], caches, idx + 1), nxt
+
+    carry = (token, caches, jnp.asarray(index, jnp.int32))
+    (_, caches, _), toks = jax.lax.scan(step, carry, None, length=k)
+    return jnp.swapaxes(toks, 0, 1), caches
 
 
 def decode_step(params: Params, token: jnp.ndarray, caches, index: jnp.ndarray,
                 cfg: ArchConfig, enc_out: Optional[jnp.ndarray] = None,
-                plan=None) -> Tuple[jnp.ndarray, Any]:
+                plan=None, kv_len: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, Any]:
     """One decode step.  token: [B, 1] int32; index: scalar position.
     ``plan`` (a static core.plan.KernelPlan) executes each layer's FFN
     through the Pallas kernel variant the granted candidate lowered to.
-    Returns (logits [B, 1, V], updated caches)."""
+    ``kv_len`` (static) bounds the attention read to the live prefix of
+    the KV cache — see :func:`repro.models.attention.mha`; requires
+    index < kv_len.  Returns (logits [B, 1, V], updated caches).
+
+    Cache-update structure matters enormously here.  The old layer scan
+    consumed the stacked caches as scan *xs* and re-stacked the updated
+    caches as scan *ys* — allocating and filling a fresh full-cache
+    buffer on EVERY decode step (O(cache bytes) per token).  For shallow
+    stacks (every ``reduced()`` serving config) the caches are a tuple
+    of independent per-group buffers (see :func:`init_caches`) and the
+    group loop is unrolled as straight-line code: each KV write is one
+    in-place dynamic-update-slice on its own buffer — which XLA aliases
+    end-to-end when the caller donates the caches (the serving epoch
+    scan) — and attention reads the buffer directly, no group-axis
+    slicing.  Per-step cache cost drops from O(cache bytes) to
+    O(tokens written) plus the unavoidable attention read.  Deep stacks
+    keep the compact scan-over-layers HLO — essential for the
+    512-device dry-run — carrying the stacked caches through the scan
+    instead of the xs/ys re-stack."""
     x = embed(params["embed"], token)
     positions = jnp.full((1, 1), index, jnp.int32)
+    G = num_groups(cfg)
+    layer_stack = params["layers"] if cfg.family != "encdec" else (
+        params["layers"], params["xattn"])
 
-    def group_fn(x, scan_in):
-        if cfg.family == "encdec":
-            (gp, xp), cache = scan_in
-        else:
-            gp, cache = scan_in
-            xp = None
+    def run_group(x, gp, xp, cache):
+        """One layer group against its own cache: returns
+        (x, new_cache)."""
         if cfg.family == "hybrid":
             def ssm_step(xc, sp_state):
                 sp, st = sp_state
                 y, new_st = _ssm_block(sp, xc, cfg, state=st, decode=True)
                 return y, new_st
-            x, new_ssm = jax.lax.scan(ssm_step, x, (gp["ssm"], cache["ssm"]),
+            x, new_ssm = jax.lax.scan(ssm_step, x,
+                                      (gp["ssm"], cache["ssm"]),
                                       unroll=max(1, cfg.attn_every - 1))
             x, new_kv, _ = _dense_block(params["shared_attn"], x, cfg,
                                         kv_cache=cache["attn"],
-                                        cache_index=index, positions=positions,
-                                        plan=plan)
+                                        cache_index=index, kv_len=kv_len,
+                                        positions=positions, plan=plan)
             return x, {"ssm": new_ssm, "attn": new_kv}
         if cfg.family == "ssm":
-            x, new_state = _ssm_block(gp, x, cfg, state=cache, decode=True)
-            return x, new_state
+            return _ssm_block(gp, x, cfg, state=cache, decode=True)
         x, new_kv, _ = _dense_block(gp, x, cfg, kv_cache=cache,
-                                    cache_index=index, positions=positions,
+                                    cache_index=index, kv_len=kv_len,
+                                    positions=positions,
                                     xattn_kv=enc_out, xp=xp, plan=plan)
         return x, new_kv
 
-    layer_stack = params["layers"] if cfg.family != "encdec" else (
-        params["layers"], params["xattn"])
-    x, new_caches = jax.lax.scan(group_fn, x, (layer_stack, caches),
-                                 unroll=_SCAN_UNROLL)
+    if G <= _DECODE_UNROLL_MAX_GROUPS:
+        new_caches = list(caches)
+        for g in range(G):
+            stk = jax.tree_util.tree_map(lambda p: p[g], layer_stack)
+            gp, xp = stk if cfg.family == "encdec" else (stk, None)
+            x, new_caches[g] = run_group(x, gp, xp, new_caches[g])
+        new_caches = tuple(new_caches)
+    else:
+        def group_fn(carry, scan_in):
+            x, caches = carry
+            if cfg.family == "encdec":
+                (gp, xp), g = scan_in
+            else:
+                (gp, g), xp = scan_in, None
+            cache = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, g, 0,
+                                                       keepdims=False),
+                caches)
+            x, new_cache = run_group(x, gp, xp, cache)
+            caches = jax.tree_util.tree_map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n, g, 0),
+                caches, new_cache)
+            return (x, caches), None
+
+        (x, new_caches), _ = jax.lax.scan(
+            group_fn, (x, caches), (layer_stack, jnp.arange(G)),
+            unroll=_SCAN_UNROLL)
+
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params["embed"], x)
     return logits, new_caches

@@ -254,7 +254,7 @@ class TransparentPolicy:
                                  rd, wr, access), charge)
             self._grant_cache[key] = hit
         eplan, charge = hit
-        task.nec.ledger.charge_bulk(task.id, *charge)
+        task.charge(charge)
         return eplan
 
     def on_layer_end(self, task, now: float) -> None:
