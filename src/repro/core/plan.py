@@ -28,7 +28,8 @@ from typing import Optional, Tuple
 from repro.core.allocator import Selection
 from repro.core.vmem import (LANE, PAGE_BYTES, TileConfig,
                              fused_ffn_block_s, fused_ffn_vmem_bytes,
-                             lower_matmul_tile, min_fused_block_f)
+                             lower_matmul_tile, min_fused_block_f,
+                             prefill_chunk_tokens)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +126,40 @@ def lower_ssm_chunk(default_chunk: int, pages: int) -> int:
     while c > 64 and 12 * c * c > cap:
         c //= 2
     return max(c, min(64, default_chunk))
+
+
+def lower_prefill_chunk(plan: KernelPlan, *, d_model: int, d_ff: int,
+                        dtype_bytes: int, align: int = LANE,
+                        max_tokens: int = 2 * LANE,
+                        remaining: Optional[int] = None) -> int:
+    """Lower a granted KernelPlan into the prefill chunk length it
+    admits: the number of prompt tokens one chunk may carry before its
+    working set outgrows the pages the plan was lowered for.  A fused
+    (LBM) grant admits large chunks; a starved tiled grant degrades to
+    one-LANE chunks instead of thrashing the shared VMEM pool — the
+    serving-side knob that makes CaMDN's dynamic allocation visible as
+    chunk shapes resizing at runtime.
+
+    ``remaining`` clamps the chunk to the prompt tokens left AND
+    absorbs a sub-``align`` tail into this chunk: a lone tail (e.g. one
+    token of a 129-token prompt chunked at 128) would contract its
+    attention through a different XLA path than the same tokens inside
+    a larger chunk, breaking the chunked == one-shot bitwise contract.
+    With absorption every emitted chunk either ends the prompt or
+    leaves at least ``align`` tokens, so interior boundaries stay
+    aligned and no chunk is ever smaller than ``align`` (unless the
+    whole prompt is).  The cost is bounded: an absorbed final chunk
+    exceeds the grant-lowered length by at most ``align - 1`` tokens —
+    one extra LANE row of working set beyond what the chunk MCT was
+    admitted and charged for, accepted as modeling slack on the last
+    chunk of a non-aligned prompt."""
+    tokens = prefill_chunk_tokens(plan.pages, d_model, d_ff, dtype_bytes,
+                                  align=align, max_tokens=max_tokens)
+    if remaining is not None:
+        tokens = min(tokens, remaining)
+        if 0 < remaining - tokens < align:
+            tokens = remaining
+    return tokens
 
 
 def lower_selection(sel: Selection, pages: int, *, seq_block: int,

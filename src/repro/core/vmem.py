@@ -141,6 +141,35 @@ def fused_ffn_admissible(seq_block: int, d_model: int, d_ff: int,
                            dtype_bytes) <= pages_avail
 
 
+def prefill_chunk_tokens(pages: int, d_model: int, d_ff: int,
+                         dtype_bytes: int, *, align: int = LANE,
+                         max_tokens: int = 2 * LANE) -> int:
+    """Cache-aware prefill chunk sizing: the largest ``align``-multiple
+    of tokens whose chunk working set fits the granted pages.  The
+    working set mirrors :func:`fused_ffn_vmem_bytes` with the chunk as
+    the sequence block — the double-buffered weight block (fixed per
+    chunk) plus the per-token x/out rows, fp32 accumulator row, and fp32
+    hidden rows — so a grant that admits the fused (LBM) kernel admits
+    a full ``max_tokens`` chunk, and smaller tiled grants degrade to
+    one-LANE chunks.  Floored at one ``align`` unit so a starved tenant
+    still makes progress (with small tiled kernels) instead of
+    stalling, and capped at ``max_tokens`` (the scheduling-graph
+    seq_block the chunk MCT was built for).
+
+    ``align`` is LANE for attention archs (chunk boundaries stay on the
+    MXU tile / KV-window grid) and lcm(LANE, ssm_chunk) for SSM archs
+    (interior chunk boundaries must land on SSD chunk boundaries for
+    the chunked == one-shot bitwise contract)."""
+    align = max(align, 1)
+    bf = min_fused_block_f(max(d_ff, 1))
+    weights = 2 * 3 * d_model * bf * dtype_bytes
+    per_token = 2 * d_model * dtype_bytes + 4 * d_model + 2 * bf * 4
+    fit = max(0, pages * PAGE_BYTES - weights) // per_token
+    tokens = (fit // align) * align
+    cap = max((max_tokens // align) * align, align)
+    return max(align, min(tokens, cap))
+
+
 def select_tile(cands: List[TileConfig], pages_avail: int) -> TileConfig:
     """Best-fit selection (mirrors MCT.best_fit): the largest-footprint
     candidate whose VMEM claim fits the granted pages."""

@@ -35,6 +35,45 @@ The execution side is pipelined around **scheduling epochs**:
   device value — tokens and caches stay on device, and results are
   fetched once after the last epoch.
 
+The server is a **continuous-batching** server: tenants may arrive
+mid-run with real prompts (:class:`~repro.sim.driver.TenantSpec` /
+:class:`~repro.sim.driver.PoissonArrivals` — the same arrival vocabulary
+the analytic simulator uses), and each prompt is consumed as a sequence
+of **cache-aware prefill chunks** interleaved into the epoch pipeline:
+
+* An arriving tenant reserves pages for its KV working set (held until
+  departure — the long-lived VMEM occupant a prompt brings), then its
+  prompt is prefilled chunk by chunk.  Each chunk is scheduled as a
+  first-class work item inside the epoch: the tenant's prefill-block
+  MCT runs through ``policy.charge_and_plan`` (NEC-charged per chunk),
+  the granted Selection lowers through the existing KernelPlan
+  machinery, and the *chunk length* is lowered from that grant
+  (:func:`repro.core.plan.lower_prefill_chunk`) — a big grant prefills
+  in large chunks, a starved grant degrades to one-LANE chunks instead
+  of thrashing the shared pool.  Grants are renegotiated between
+  chunks, so the allocator's dynamic algorithm visibly resizes chunk
+  shapes as co-located tenants come and go.
+* Chunks write KV into the live cache prefix via the existing
+  LANE-aligned ``kv_len`` windows
+  (:func:`repro.models.transformer.prefill_chunk`); after the last
+  chunk the tenant flips to decode with no recompile of its bucket.
+  Chunk execution follows the reference jnp path, so any chunking of a
+  prompt is bit-identical to a one-shot prefill — which is what makes
+  decode outputs bit-identical between the two admission modes below.
+* ``admission="interleaved"`` (continuous batching) plans prefill
+  chunks and decode windows as work items of the SAME scheduling epoch:
+  the chunks dispatch through small per-arch chunk programs (cached
+  across epochs and across same-arch arrivals — folding their
+  run-to-run-varying shapes into the fused epoch jit would recompile
+  the whole epoch per chunk resize) back-to-back with the fused decode
+  call, all asynchronously, so decode never stalls on admission.
+  ``admission="sequential"`` is the static-batching baseline the
+  serving benchmark measures against: a request waits for the in-flight
+  batch to DRAIN before it is admitted (the queue wait counts against
+  its TTFT), then its whole prompt prefills as one exclusive
+  synchronous call, FCFS, before decode resumes.  Per-tenant
+  time-to-first-token (TTFT) is recorded either way.
+
 ``pipeline=False`` keeps the serial reference loop (one scheduled,
 charged, dispatched step per token); its outputs are bit-identical to
 the pipelined loop and it is the baseline the serving benchmark
@@ -50,6 +89,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -62,15 +102,18 @@ from repro.core.cache import CacheConfig, SharedCache
 from repro.core.mapping import MapperConfig
 from repro.core.mct import MCT, ModelMapping
 from repro.core.nec import Nec
-from repro.core.plan import KernelPlan
+from repro.core.plan import KernelPlan, lower_prefill_chunk
 from repro.core.policy import CamdnPolicy
 from repro.core.runtime import TenantModel, TenantTask
-from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph
+from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph, \
+    ceil_div
 from repro.core.vmem import (LANE, PAGE_BYTES, VMEM_PAGES, fused_ffn_pages,
                              lower_selection)
 from repro.models import model as M
 from repro.models.base import ArchConfig, get_arch
-from repro.models.transformer import init_caches
+from repro.models.ssm import CONV_K
+from repro.models.transformer import init_caches, num_groups
+from repro.sim.driver import PoissonArrivals, TenantSpec
 
 
 def _elem_bytes(cfg: ArchConfig) -> int:
@@ -108,6 +151,26 @@ def _vmem_mapper(total_pages: int) -> MapperConfig:
                         npu_subspace_bytes=total_pages * PAGE_BYTES)
 
 
+def _kv_reserve_pages(cfg: ArchConfig, batch: int, tokens: int) -> int:
+    """Pages an admitted prompt-tenant reserves for its KV / state
+    working set — the long-lived VMEM occupant a real prompt brings
+    (the decode cache prefix its chunks fill).  Attention archs scale
+    with the prompt; SSM state is O(1); hybrids carry both.  This is
+    what makes the serving-side dynamic allocation visible: reserved
+    pages squeeze co-tenants' grants (and chunk sizes) and are returned
+    on departure."""
+    eb = _elem_bytes(cfg)
+    G = num_groups(cfg)
+    kv_groups = G if cfg.family != "ssm" else 0
+    ssm_groups = {"ssm": G, "hybrid": G * (cfg.attn_every - 1)}.get(
+        cfg.family, 0)
+    kv = kv_groups * 2 * batch * tokens * cfg.num_kv_heads * cfg.hd * eb
+    state = ssm_groups * batch * (
+        (CONV_K - 1) * (cfg.d_inner + 2 * cfg.ssm_state) * eb
+        + cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4)
+    return ceil_div(kv + state, PAGE_BYTES) if tokens > 0 else 0
+
+
 @dataclasses.dataclass
 class Tenant:
     tid: str
@@ -116,7 +179,8 @@ class Tenant:
     caches: Any
     decode: Any        # one-step jit (serial reference path)
     task: TenantTask
-    token: Any         # [B, 1] int32 device array: next input (feedback)
+    token: Any         # [B, 1] int32 device array: next input (feedback);
+    #                    None until a prompt tenant finishes prefill
     enc: Any = None    # encdec: fixed encoder output, built once
     index: int = 0
     tokens_served: int = 0
@@ -126,6 +190,21 @@ class Tenant:
     # decoded tokens, one [B, k] device array per epoch — fetched to the
     # host only once, after the serving loop finishes
     outputs: List[Any] = dataclasses.field(default_factory=list)
+    # ---- continuous batching ----------------------------------------
+    prompt: Optional[np.ndarray] = None   # [B, P] int32 host tokens
+    prompt_len: int = 0
+    pf_pos: int = 0                       # prompt tokens already in cache
+    ptask: Optional[TenantTask] = None    # prefill-side task (chunk MCT)
+    chunks: List[int] = dataclasses.field(default_factory=list)
+    budget_left: Optional[int] = None     # decode steps before departure
+    departed: bool = False
+    admitted_wall: Optional[float] = None
+    ttft: Optional[float] = None          # seconds admission -> 1st token
+    run_steps: int = 0                    # decode steps this run() call
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prompt is not None and self.pf_pos < self.prompt_len
 
 
 class MultiTenantServer:
@@ -141,15 +220,34 @@ class MultiTenantServer:
     ``epoch_len`` is K, the number of decode steps one grant covers;
     ``pipeline=False`` selects the serial reference loop (per-step
     scheduling, charging, and dispatch — the pre-pipeline behaviour).
+
+    Continuous batching: ``tenants`` / ``arrivals`` add prompt-driven
+    dynamic tenants (see module docstring).  ``arrive_at`` seconds map
+    onto the server's logical step clock via ``steps_per_s`` (the clock
+    advances ``epoch_len`` per pipelined epoch, 1 per serial round), so
+    admission points are deterministic and identical across admission
+    modes.  ``admission`` selects interleaved chunked prefill (default)
+    or the sequential whole-prompt-then-decode baseline;
+    ``prefill_chunk`` is the nominal (maximum) chunk length the chunk
+    MCT is built for.
     """
 
-    def __init__(self, arch_ids: List[str], batch: int = 2,
+    def __init__(self, arch_ids: Optional[List[str]] = None, batch: int = 2,
                  max_len: int = 128, total_pages: int = VMEM_PAGES,
                  qos_targets: Optional[Dict[str, float]] = None,
-                 epoch_len: int = 8, pipeline: bool = True):
+                 epoch_len: int = 8, pipeline: bool = True,
+                 tenants: Optional[List[TenantSpec]] = None,
+                 arrivals: Optional[PoissonArrivals] = None,
+                 admission: str = "interleaved",
+                 prefill_chunk: int = 2 * LANE,
+                 steps_per_s: float = 1.0):
+        assert admission in ("interleaved", "sequential"), admission
         self.qos_targets = qos_targets or {}
         self.epoch_len = max(1, int(epoch_len))
         self.pipeline = bool(pipeline)
+        self.admission = admission
+        self.prefill_block = max(LANE, int(prefill_chunk))
+        self.steps_per_s = steps_per_s
         # VMEM page pool modeled by the same SharedCache/allocator the
         # simulator uses — one CacheConfig with page-granular VMEM
         # the whole pool is CaMDN-schedulable VMEM (XLA's reserved slice
@@ -165,63 +263,207 @@ class MultiTenantServer:
         self.tenants: List[Tenant] = []
         self.batch = batch
         self.max_len = max_len
+        self._clock = 0               # logical step clock (admissions)
+        self._n_admitted = 0
         # jitted one-step functions are shared per arch so same-arch
         # tenants hit one compile cache (the pipelined path compiles
         # through _fused_epoch_fn instead)
-        step_fns: Dict[str, Any] = {}
-        for i, aid in enumerate(arch_ids):
-            cfg = get_arch(aid).reduced()
-            params = M.init_params(cfg, jax.random.PRNGKey(i))
-            caches = init_caches(params, cfg, batch, max_len)
-            if cfg.name not in step_fns:
-                # plan is static: each (arch, plan) pair compiles once
-                # and is cached; the grant decides which kernels run
-                step_fns[cfg.name] = jax.jit(
-                    M.make_decode_step(cfg),
-                    static_argnames=("plan", "kv_len"))
-            tid = f"t{i}:{aid}"
-            tm = TenantModel(_ffn_graph(aid, cfg, seq_block=batch),
-                             self.mapper)
-            self._align_lbm_to_vmem(tm, cfg)
-            task = TenantTask(tid, tm, self.cache, self.nec, self.policy)
-            enc = (jnp.zeros((batch, cfg.enc_len, cfg.d_model), cfg.jdtype)
-                   if cfg.family == "encdec" else None)
-            token = jnp.full((batch, 1), i % cfg.vocab_size, jnp.int32)
-            self.tenants.append(Tenant(
-                tid, cfg, params, caches, step_fns[cfg.name], task,
-                token=token, enc=enc))
-        # ---- plan-bucketed batching ---------------------------------
-        # tenants grouped by arch; a group whose members were granted
-        # the SAME KernelPlan for an epoch decodes as one vmapped call
-        # over tenant-stacked params/caches/tokens.  Params are stacked
-        # once here; the stacked caches persist in _bucket_caches while
-        # the bucket holds.
+        self._step_fns: Dict[str, Any] = {}
         self._groups: Dict[str, List[Tenant]] = {}
-        for t in self.tenants:
-            self._groups.setdefault(t.cfg.name, []).append(t)
         self._batched: Dict[str, Any] = {}   # arch -> stacked params
-        for name, ts in self._groups.items():
-            if len(ts) >= 2:
-                self._batched[name] = jax.tree_util.tree_map(
-                    lambda *xs: jnp.stack(xs), *[t.params for t in ts])
-        # un-jitted epoch cores per arch, composed into the one fused
-        # per-epoch device call (_fused_epoch_fn); jitted per distinct
-        # (work-item structure, plans, k) combination and cached
-        self._epoch_cores: Dict[str, Any] = {
-            name: M.make_decode_epoch(ts[0].cfg)
-            for name, ts in self._groups.items()}
-        self._batched_cores: Dict[str, Any] = {
-            name: M.make_decode_epoch_batched(ts[0].cfg)
-            for name in self._batched}
+        # un-jitted epoch / prefill cores per arch, composed into the
+        # one fused per-epoch device call (_fused_epoch_fn); jitted per
+        # distinct (work-item structure, plans, k, kv) combination
+        self._epoch_cores: Dict[str, Any] = {}
+        self._batched_cores: Dict[str, Any] = {}
+        self._prefill_cores: Dict[str, Any] = {}
         self._fused_jits: Dict[Tuple, Any] = {}
+        self._prefill_jits: Dict[Tuple, Any] = {}
         # persistent tenant-stacked caches per bucketed arch group: the
         # stacked buffer stays stacked (and donated) across epochs while
         # the bucket holds, instead of an O(cache bytes) restack/slice
         # round-trip per epoch; it is unstacked back into the tenants
         # only when the bucket breaks or the run ends
         self._bucket_caches: Dict[str, Any] = {}
+        # ---- admission queue ----------------------------------------
+        specs: List[TenantSpec] = [TenantSpec(aid) for aid in arch_ids or []]
+        specs += list(tenants or [])
+        if arrivals is not None:
+            specs += arrivals.specs()
+        specs.sort(key=lambda s: s.arrive_at)
+        # queue entries are [spec, due_wall, arrive_step]: due_wall is
+        # stamped when the logical clock first passes arrive_step (the
+        # request exists from then on), so a sequential-admission queue
+        # wait counts against TTFT even though the tenant is admitted
+        # later
+        self._queue: List[List] = []
+        for spec in specs:
+            if spec.arrive_at <= 0.0:
+                self._admit_spec(spec)
+            else:
+                self.enqueue([spec])
 
-    def _align_lbm_to_vmem(self, tm: TenantModel, cfg: ArchConfig) -> None:
+    def enqueue(self, specs: List[TenantSpec]) -> None:
+        """Queue arrivals relative to the CURRENT logical clock (a
+        benchmark warms the compile caches by replaying one scenario on
+        the same server: arch/shape-keyed jit caches carry over, tenant
+        state does not)."""
+        for spec in sorted(specs, key=lambda s: s.arrive_at):
+            step = self._clock + int(math.ceil(spec.arrive_at
+                                               * self.steps_per_s))
+            self._queue.append([spec, None, step])
+        self._queue.sort(key=lambda it: it[2])
+
+    # ------------------------------------------------------- admission --
+    def _admit_spec(self, spec: TenantSpec,
+                    due_wall: Optional[float] = None) -> Tenant:
+        """Create a tenant from a spec (resident at construction or
+        arriving mid-run).  Prompt tenants get deterministic prompt
+        tokens, a prefill-block TenantTask for chunk scheduling, and a
+        KV-working-set page reservation held until departure."""
+        aid = spec.model if isinstance(spec.model, str) else spec.model.name
+        i = self._n_admitted
+        self._n_admitted += 1
+        cfg = get_arch(aid).reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(i))
+        caches = init_caches(params, cfg, self.batch, self.max_len)
+        if cfg.name not in self._step_fns:
+            # plan is static: each (arch, plan) pair compiles once
+            # and is cached; the grant decides which kernels run
+            self._step_fns[cfg.name] = jax.jit(
+                M.make_decode_step(cfg),
+                static_argnames=("plan", "kv_len"))
+        tid = f"t{i}:{aid}"
+        tm = TenantModel(_ffn_graph(aid, cfg, seq_block=self.batch),
+                         self.mapper)
+        self._align_lbm_to_vmem(tm, cfg, max(self.batch, LANE))
+        task = TenantTask(tid, tm, self.cache, self.nec, self.policy)
+        enc = (jnp.zeros((self.batch, cfg.enc_len, cfg.d_model), cfg.jdtype)
+               if cfg.family == "encdec" else None)
+        t = Tenant(tid, cfg, params, caches, self._step_fns[cfg.name], task,
+                   token=None, enc=enc)
+        t.budget_left = spec.n_inferences
+        if spec.qos_ms is not None:
+            self.qos_targets[tid] = spec.qos_ms * 1e-3
+        if spec.prompt_len > 0:
+            # the KV cache must hold the prompt plus every budgeted
+            # decode step: dynamic_update_slice CLAMPS out-of-range
+            # writes, so decoding past max_len would silently corrupt
+            # the last cache slot instead of erroring
+            need = spec.prompt_len + (spec.n_inferences or 0)
+            assert need <= self.max_len, \
+                (f"{tid}: prompt {spec.prompt_len} + decode budget "
+                 f"{spec.n_inferences or 0} > max_len {self.max_len}")
+            t.prompt_len = spec.prompt_len
+            t.prompt = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(7919 + i),
+                (self.batch, spec.prompt_len), 0, cfg.vocab_size),
+                np.int32)
+            # whole-prompt MCT for the sequential baseline, chunk-block
+            # MCT for interleaved chunked prefill
+            pf_block = (spec.prompt_len
+                        if self.admission == "sequential" or not self.pipeline
+                        else self.prefill_block)
+            ptm = TenantModel(_ffn_graph(aid, cfg, seq_block=pf_block),
+                              self.mapper)
+            self._align_lbm_to_vmem(ptm, cfg, max(pf_block, LANE))
+            t.ptask = TenantTask(tid + "/pf", ptm, self.cache, self.nec,
+                                 self.policy)
+            # best-effort KV reservation: what the pool can spare now
+            want = _kv_reserve_pages(cfg, self.batch, spec.prompt_len)
+            self.cache.alloc(tid + "#kv",
+                             min(want, self.cache.free_pages))
+        else:
+            # legacy seed-token flow: no prompt, decode from token 0
+            t.token = jnp.full((self.batch, 1), i % cfg.vocab_size,
+                               jnp.int32)
+        t.admitted_wall = due_wall if due_wall is not None else time.time()
+        self.tenants.append(t)
+        self._unstack_bucket(cfg.name)
+        self._groups.setdefault(cfg.name, []).append(t)
+        self._epoch_cores.setdefault(cfg.name, M.make_decode_epoch(cfg))
+        self._prefill_cores.setdefault(cfg.name, M.make_prefill_chunk(cfg))
+        self._batched.pop(cfg.name, None)   # group changed: stack stale
+        return t
+
+    def _batched_params(self, name: str):
+        """Tenant-stacked params for a bucketed arch group, built
+        LAZILY on the first dispatch of an actual bucket and cached
+        while the group membership holds — an admission/departure of a
+        never-bucketing arrival must not pay (or retain) an
+        O(param bytes) restack of the whole group."""
+        stacked = self._batched.get(name)
+        if stacked is None:
+            ts = self._groups[name]
+            stacked = self._batched[name] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *[t.params for t in ts])
+            self._batched_cores.setdefault(
+                name, M.make_decode_epoch_batched(ts[0].cfg))
+        return stacked
+
+    def _due(self, item: List) -> bool:
+        return item[2] <= self._clock
+
+    def _admit_due(self, steps: int) -> None:
+        """Admission control, checked at epoch boundaries.  Requests
+        whose arrive_at (mapped onto the logical step clock) has passed
+        are stamped as *due* — their TTFT clock starts — and then:
+
+        * ``interleaved`` (continuous batching): admitted immediately;
+          their prompt chunks join the next epoch alongside everyone
+          else's decode.
+        * ``sequential`` (static batching, the measured baseline):
+          admitted only at a batch boundary — when every in-flight
+          tenant has drained its decode work — and then prefilled
+          whole-prompt, FCFS.  The queue wait counts against TTFT.
+        """
+        now = time.time()
+        for item in self._queue:
+            if item[1] is None and self._due(item):
+                item[1] = now
+        continuous = self.pipeline and self.admission == "interleaved"
+        if not continuous:
+            busy = any((not t.departed and t.prefilling)
+                       or self._decodable(t, steps)
+                       for t in self.tenants)
+            if busy:
+                return
+        while self._queue and self._due(self._queue[0]):
+            spec, due_wall, _ = self._queue.pop(0)
+            self._admit_spec(spec, due_wall)
+
+    def _depart(self, t: Tenant) -> None:
+        """Dynamic tenancy, serving side: the tenant leaves, reclaiming
+        its page grants, its KV reservation, and its allocator profiles
+        — surviving tenants' next grants (and prefill chunk sizes) grow
+        accordingly."""
+        if t.departed:
+            return
+        t.departed = True
+        t.task.depart()
+        if t.ptask is not None:
+            t.ptask.depart()
+        self.cache.free(t.tid + "#kv", None)
+        self._unstack_bucket(t.cfg.name)
+        self._groups[t.cfg.name].remove(t)
+        self._batched.pop(t.cfg.name, None)   # group changed: stack stale
+        # release the REAL device buffers too, not just the modeled
+        # pages: a long-running server under open-loop arrivals would
+        # otherwise accumulate one full param copy + max_len KV cache
+        # per departed tenant (outputs/choices stay for the result)
+        t.params = None
+        t.caches = None
+        t.enc = None
+        t.prompt = None
+
+    def _process_departures(self) -> None:
+        for t in self.tenants:
+            if (not t.departed and t.budget_left is not None
+                    and t.budget_left <= 0 and not t.prefilling):
+                self._depart(t)
+
+    def _align_lbm_to_vmem(self, tm: TenantModel, cfg: ArchConfig,
+                           seq_block: int) -> None:
         """Make the LBM candidates quote the *fused kernel's* VMEM
         working set: on the VMEM substrate a block grant must admit the
         block_fused_ffn claim, or the lowering would silently demote
@@ -234,8 +476,7 @@ class MultiTenantServer:
         aligned MCTs go into a fresh ModelMapping instead of mutating
         the shared one."""
         eb = _elem_bytes(cfg)
-        need = fused_ffn_pages(max(self.batch, LANE), cfg.d_model,
-                               cfg.d_ff, eb)
+        need = fused_ffn_pages(seq_block, cfg.d_model, cfg.d_ff, eb)
         mcts = []
         for mct in tm.mapping.mcts:
             if mct.lbm is not None and mct.lbm.p_need < need:
@@ -246,28 +487,30 @@ class MultiTenantServer:
                                   tm.mapping.blocks)
 
     # ------------------------------------------------------ scheduling --
-    def _schedule_block(self, t: Tenant, now: float
+    def _schedule_block(self, t: Tenant, now: float,
+                        task: Optional[TenantTask] = None
                         ) -> List[Tuple[Selection, int]]:
-        """Run the tenant's FFN block through the unified TenantTask
-        state machine: select -> (timeout-downgrade)* -> grant -> end,
+        """Run a tenant block through the unified TenantTask state
+        machine: select -> (timeout-downgrade)* -> grant -> end,
         charging traffic through the NEC ledger (folded by the task's
         ``charge_repeat`` when the grant covers a whole epoch).
-        Returns, per layer, the final Selection and the pages actually
-        held at execution — the inputs the KernelPlan lowering
-        consumes."""
-        task = t.task
+        ``task`` defaults to the tenant's decode-block task; the chunked
+        prefill path passes the prefill-block task instead.  Returns,
+        per layer, the final Selection and the pages actually held at
+        execution — the inputs the KernelPlan lowering consumes."""
+        task = task or t.task
         if task.done:
             task.reset_for_next_inference()
         sched: List[Tuple[Selection, int]] = []
         while not task.done:
             sel = task.begin_layer(now)
-            granted = self.cache.alloc(t.tid, task.pages_to_request())
+            granted = self.cache.alloc(task.id, task.pages_to_request())
             attempts = 0
             while granted is None and attempts < len(task.mct().lwms) + 2:
                 # synchronous serving loop: a failed grant downgrades
                 # immediately (the simulator waits out t_ahead instead)
                 sel = task.on_timeout(now)
-                granted = self.cache.alloc(t.tid, task.pages_to_request())
+                granted = self.cache.alloc(task.id, task.pages_to_request())
                 attempts += 1
             if granted is None:
                 # starved: stream the layer with whatever is already
@@ -285,20 +528,20 @@ class MultiTenantServer:
             task.end_layer(now)
         return sched
 
-    def _lower_plan(self, t: Tenant,
-                    sched: List[Tuple[Selection, int]]) -> KernelPlan:
+    def _lower_plan(self, t: Tenant, sched: List[Tuple[Selection, int]],
+                    seq_block: Optional[int] = None) -> KernelPlan:
         """Lower the block's granted selections into the KernelPlan the
-        decode step executes.  An LBM grant covers the whole block; LWM
-        layers each lower their own GEMM tile from their own grant.
-        Lowered with the REAL cfg.d_ff — the dimension the kernels
-        execute with — not the padded scheduling-graph one."""
+        decode step (or prefill chunk) executes.  An LBM grant covers
+        the whole block; LWM layers each lower their own GEMM tile from
+        their own grant.  Lowered with the REAL cfg.d_ff — the dimension
+        the kernels execute with — not the padded scheduling-graph one."""
         cfg = t.cfg
         lbm = [(s, p) for s, p in sched if s.candidate.kind == "LBM"]
         sel, pages = lbm[0] if lbm else sched[0]
         down_pages = None if lbm else (sched[-1][1] if len(sched) > 1
                                        else None)
         return lower_selection(
-            sel, pages, seq_block=max(self.batch, LANE),
+            sel, pages, seq_block=seq_block or max(self.batch, LANE),
             d_model=cfg.d_model, d_ff=cfg.d_ff,
             dtype_bytes=_elem_bytes(cfg), head_dim=cfg.hd,
             ssm_chunk=cfg.ssm_chunk, down_pages=down_pages)
@@ -334,35 +577,150 @@ class MultiTenantServer:
             return None
         return plan
 
-    def _plan_epoch(self, now: float, k: int) -> List[Tuple]:
-        """Host-side scheduling for one epoch: select + charge every
-        tenant's block (worst QoS slack first — first claim on the page
-        pool), then bucket tenants whose (arch, plan) coincide into
-        single batched decode calls.  Pure host work: runs one epoch
-        ahead of the device."""
-        order = self.tenants
-        if self.qos_targets:
-            order = sorted(self.tenants, key=lambda t: self._slack(t, now))
-        plans: Dict[str, Optional[KernelPlan]] = {}
-        for t in order:
-            plans[t.tid] = self._schedule_epoch(t, now, k)
-        work: List[Tuple] = []
-        seen = set()
+    def _chunk_align(self, cfg: ArchConfig) -> int:
+        """Interior prefill-chunk boundaries stay on the LANE grid, and
+        for SSM/hybrid archs also on SSD chunk boundaries — the
+        alignment the chunked == one-shot bitwise contract needs."""
+        if cfg.family in ("ssm", "hybrid") and cfg.ssm_chunk > 0:
+            return LANE * cfg.ssm_chunk // math.gcd(LANE, cfg.ssm_chunk)
+        return LANE
+
+    def _plan_prefill_chunk(self, t: Tenant, now: float) -> Tuple:
+        """Schedule ONE cache-aware prefill chunk: renegotiate the
+        tenant's grant through the prefill-block MCT (NEC-charged per
+        chunk via charge_and_plan), lower the granted Selection into a
+        KernelPlan, and lower THAT into the chunk length the grant
+        admits.  Returns the epoch work item."""
+        sched = self._schedule_block(t, now, task=t.ptask)
+        plan = self._lower_plan(t, sched, seq_block=self.prefill_block)
+        t.plans.append(plan)
+        chunk = lower_prefill_chunk(
+            plan, d_model=t.cfg.d_model,
+            d_ff=max(t.cfg.d_ff, t.cfg.d_model),
+            dtype_bytes=_elem_bytes(t.cfg),
+            align=self._chunk_align(t.cfg), max_tokens=self.prefill_block,
+            remaining=t.prompt_len - t.pf_pos)
+        t.chunks.append(chunk)
+        return ("prefill", t, plan, chunk)
+
+    def _finish_prefill(self, t: Tenant, token: Any) -> None:
+        """The final chunk's greedy token flips the tenant to decode:
+        seed the feedback loop and retire the prefill task.  The TTFT
+        stamp (which blocks on the token) is the caller's job — the
+        epoch dispatcher defers it until AFTER the epoch's decode items
+        are dispatched, so admission never stalls the decode pipeline."""
+        t.token = token
+        t.outputs.append(token)
+        t.tokens_served += self.batch
+        t.index = t.prompt_len
+        t.ptask.depart()
+
+    def _stamp_ttft(self, t: Tenant, token: Any) -> None:
+        jax.block_until_ready(token)
+        t.ttft = time.time() - t.admitted_wall
+
+    def _prefill_whole(self, t: Tenant, now: float) -> None:
+        """Sequential-admission baseline (and the serial reference
+        loop's prompt path): the whole prompt prefills as ONE exclusive
+        synchronous device call — scheduled through the whole-prompt
+        MCT, so an over-sized working set visibly degrades to small
+        tiles — and decode epochs stall behind it (head-of-line)."""
+        sched = self._schedule_block(t, now, task=t.ptask)
+        plan = self._lower_plan(t, sched, seq_block=t.prompt_len)
+        t.plans.append(plan)
+        t.chunks.append(t.prompt_len)
+        kv = self._kv_len(t.prompt_len)
+        fn = self._prefill_fn(t.cfg.name)
+        tok, t.caches = fn(t.params, t.caches,
+                           jnp.asarray(t.prompt), jnp.int32(0), t.enc,
+                           kv_len=kv)
+        t.pf_pos = t.prompt_len
+        self._finish_prefill(t, tok)
+        self._stamp_ttft(t, tok)
+
+    def _sequential_prefills_due(self, now: float) -> None:
+        """Head-of-line admission: prefill every pending prompt to
+        completion (FCFS) before the next decode epoch is planned."""
         for t in self.tenants:
-            if t.tid in seen:
-                continue
-            group = self._groups[t.cfg.name]
-            gplans = [plans[g.tid] for g in group]
-            if (t.cfg.name in self._batched
-                    and all(p == gplans[0] for p in gplans)
-                    and len({g.index for g in group}) == 1):
-                work.append(("bucket", group, gplans[0], k))
-                seen.update(g.tid for g in group)
-            else:
-                self._unstack_bucket(t.cfg.name)
-                work.append(("single", t, plans[t.tid], k))
-                seen.add(t.tid)
-        return work
+            if not t.departed and t.prefilling:
+                self._prefill_whole(t, now)
+
+    def _remaining(self, t: Tenant, steps: int) -> int:
+        if t.budget_left is not None:
+            return max(0, t.budget_left)
+        return max(0, steps - t.run_steps)
+
+    def _decodable(self, t: Tenant, steps: int) -> bool:
+        """Tenant has decode work this run: active, past prefill (the
+        feedback token exists), budget/steps left.  THE runnable
+        predicate — shared by admission gating, epoch planning, and the
+        serial loop so the three can never disagree."""
+        return (not t.departed and t.token is not None
+                and self._remaining(t, steps) > 0)
+
+    def _plan_epoch(self, now: float, steps: int) -> List[Tuple]:
+        """Host-side scheduling for one epoch: admit due arrivals,
+        retire exhausted tenants, then select + charge every active
+        tenant's work — a cache-aware prefill chunk for tenants still
+        consuming their prompt, a K-step decode window for the rest
+        (worst QoS slack first — first claim on the page pool).  Decode
+        tenants whose (arch, plan, index, k) coincide bucket into single
+        batched calls.  Pure host work: runs one epoch ahead of the
+        device."""
+        while True:
+            self._admit_due(steps)
+            self._process_departures()
+            if not self.pipeline or self.admission == "sequential":
+                self._sequential_prefills_due(now)
+            active = [t for t in self.tenants if not t.departed]
+            order = active
+            if self.qos_targets:
+                order = sorted(active, key=lambda t: self._slack(t, now))
+            pf_items: Dict[str, Tuple] = {}
+            dec_plans: Dict[str, Tuple[Optional[KernelPlan], int]] = {}
+            for t in order:
+                if t.prefilling:
+                    pf_items[t.tid] = self._plan_prefill_chunk(t, now)
+                elif self._decodable(t, steps):
+                    # epochs never straddle a KV-window boundary: every
+                    # step of the epoch shares one static kv_len,
+                    # computed from THIS tenant's index (tenants admit
+                    # at different times with different prompt lengths)
+                    k = min(self.epoch_len, self._remaining(t, steps),
+                            LANE - (t.index % LANE))
+                    assert t.index + k <= self.max_len, \
+                        f"{t.tid}: decode past max_len {self.max_len}"
+                    dec_plans[t.tid] = (self._schedule_epoch(t, now, k), k)
+            work: List[Tuple] = []
+            seen = set()
+            for t in self.tenants:
+                if t.tid in seen or t.departed:
+                    continue
+                if t.tid in pf_items:
+                    work.append(pf_items[t.tid])
+                    seen.add(t.tid)
+                    continue
+                if t.tid not in dec_plans:
+                    continue
+                plan, k = dec_plans[t.tid]
+                group = self._groups[t.cfg.name]
+                bucketable = (
+                    len(group) >= 2
+                    and all(g.tid in dec_plans for g in group)
+                    and all(dec_plans[g.tid] == (plan, k) for g in group)
+                    and len({g.index for g in group}) == 1)
+                if bucketable:
+                    work.append(("bucket", group, plan, k))
+                    seen.update(g.tid for g in group)
+                else:
+                    self._unstack_bucket(t.cfg.name)
+                    work.append(("single", t, plan, k))
+                    seen.add(t.tid)
+            self._clock += self.epoch_len
+            if work or not self._queue:
+                return work
+            # idle gap before the next arrival: fast-forward the clock
+            self._clock = max(self._clock, self._queue[0][2])
 
     # ------------------------------------------------------- execution --
     def _unstack_bucket(self, name: str) -> None:
@@ -378,6 +736,9 @@ class MultiTenantServer:
         t.index += k
         t.tokens_served += self.batch * k
         t.epochs_served += 1
+        t.run_steps += k
+        if t.budget_left is not None:
+            t.budget_left -= k
 
     def _kv_len(self, upto: int) -> int:
         """Static attention-read bound for decode indices < ``upto``:
@@ -389,22 +750,28 @@ class MultiTenantServer:
         (bit-exact parity)."""
         return min(self.max_len, -(-max(1, upto) // LANE) * LANE)
 
+    def _item_kv(self, item: Tuple) -> int:
+        t0 = item[1][0] if item[0] == "bucket" else item[1]
+        return self._kv_len(t0.index + item[3])
+
     def _fused_epoch_fn(self, work: List[Tuple]):
-        """One jitted device program for the WHOLE epoch: every work
-        item's epoch scan (single-tenant or vmapped bucket) becomes an
-        independent subgraph of a single XLA computation, so one
+        """One jitted device program for the epoch's DECODE work: every
+        decode item (single-tenant epoch scan or vmapped bucket) becomes
+        an independent subgraph of a single XLA computation, so one
         dispatch replaces n_tenants calls and the CPU/TPU runtime is
         free to overlap the independent tenant subgraphs.  Jitted per
-        distinct (item structure, plans, k) key and cached — in steady
-        state the grants repeat and every epoch is a cache hit."""
-        def item_kv(item):
-            t0 = item[1][0] if item[0] == "bucket" else item[1]
-            return self._kv_len(t0.index + item[3])
-
+        distinct (item structure, plans, k, kv) key and cached — in
+        steady state the grants repeat and every epoch is a cache hit.
+        (Prefill chunks deliberately dispatch as their own per-(arch,
+        chunk, kv) jits right before this call: folding their
+        run-to-run-varying shapes into the fused program would recompile
+        the whole epoch on every chunk resize, whereas standalone chunk
+        programs are cached across epochs AND across same-arch
+        arrivals.)"""
         key = tuple(
             (item[0], (item[1][0].cfg.name if item[0] == "bucket"
                        else item[1].cfg.name), item[2], item[3],
-             item_kv(item))
+             self._item_kv(item))
             for item in work)
         fn = self._fused_jits.get(key)
         if fn is not None:
@@ -413,10 +780,12 @@ class MultiTenantServer:
         for item in work:
             kind, target, plan, k = item
             if kind == "bucket":
-                core = self._batched_cores[target[0].cfg.name]
+                core = self._batched_cores.setdefault(
+                    target[0].cfg.name,
+                    M.make_decode_epoch_batched(target[0].cfg))
             else:
                 core = self._epoch_cores[target.cfg.name]
-            cores.append((core, plan, k, item_kv(item)))
+            cores.append((core, plan, k, self._item_kv(item)))
 
         def fused(params_list, caches_list, token_list, index_list,
                   enc_list):
@@ -434,21 +803,63 @@ class MultiTenantServer:
         self._fused_jits[key] = fn
         return fn
 
+    def _prefill_fn(self, name: str):
+        """Jitted prefill-chunk program, one per arch; jit's own cache
+        keys the (chunk length, kv window) variants — chunk lengths are
+        align-quantized, so the variant space is tiny and reused across
+        epochs and across same-arch arrivals."""
+        fn = self._prefill_jits.get(name)
+        if fn is None:
+            fn = jax.jit(self._prefill_cores[name],
+                         static_argnames=("kv_len",), donate_argnums=(1,))
+            self._prefill_jits[name] = fn
+        return fn
+
+    def _dispatch_prefill(self, item: Tuple) -> Optional[Tuple]:
+        """Dispatch one cache-aware prefill chunk asynchronously (the
+        caches stay on device).  Returns (tenant, token) when this was
+        the prompt's FINAL chunk, so the epoch dispatcher can stamp
+        TTFT after the decode items have been dispatched too."""
+        _, t, _, chunk = item
+        kv = self._kv_len(t.pf_pos + chunk)
+        fn = self._prefill_fn(t.cfg.name)
+        tok, t.caches = fn(
+            t.params, t.caches,
+            jnp.asarray(t.prompt[:, t.pf_pos:t.pf_pos + chunk]),
+            jnp.int32(t.pf_pos), t.enc, kv_len=kv)
+        t.pf_pos += chunk
+        if not t.prefilling:
+            self._finish_prefill(t, tok)
+            return (t, tok)
+        return None
+
     def _dispatch_epoch(self, work: List[Tuple]) -> None:
-        """Launch one epoch's decode as ONE fused device call.  All
-        device work: the call is dispatched asynchronously and nothing
-        here blocks on a device value — tokens and caches stay on
-        device."""
-        if not work:
+        """Launch one epoch's work: the prefill chunks dispatch first
+        (each through its cached per-arch chunk program), then ALL the
+        decode items as ONE fused device call.  Everything is
+        dispatched asynchronously and nothing here blocks on a device
+        value — tokens and caches stay on device (the only sync is the
+        TTFT stamp when a tenant's final prefill chunk lands)."""
+        decode_items, finished = [], []
+        for item in work:
+            if item[0] == "prefill":
+                done = self._dispatch_prefill(item)
+                if done is not None:
+                    finished.append(done)
+            else:
+                decode_items.append(item)
+        if not decode_items:
+            for t, tok in finished:
+                self._stamp_ttft(t, tok)
             return
-        fn = self._fused_epoch_fn(work)
+        fn = self._fused_epoch_fn(decode_items)
         params_list, caches_list, token_list, index_list, enc_list = (
             [], [], [], [], [])
-        for item in work:
+        for item in decode_items:
             if item[0] == "bucket":
                 group = item[1]
                 name = group[0].cfg.name
-                params_list.append(self._batched[name])
+                params_list.append(self._batched_params(name))
                 stacked = self._bucket_caches.pop(name, None)
                 if stacked is None:
                     stacked = jax.tree_util.tree_map(
@@ -469,7 +880,7 @@ class MultiTenantServer:
                 enc_list.append(t.enc)
         toks_list, new_caches = fn(params_list, caches_list, token_list,
                                    index_list, enc_list)
-        for item, toks, caches in zip(work, toks_list, new_caches):
+        for item, toks, caches in zip(decode_items, toks_list, new_caches):
             if item[0] == "bucket":
                 _, group, _, k = item
                 # keep the bucket's caches STACKED for the next epoch;
@@ -485,11 +896,17 @@ class MultiTenantServer:
                 t.token = toks[:, -1:]
                 t.outputs.append(toks)
                 self._advance(t, k)
+        # TTFT stamps last: the blocking reads happen only after every
+        # one of this epoch's device calls is in flight
+        for t, tok in finished:
+            self._stamp_ttft(t, tok)
 
     def _serve_one_step(self, t: Tenant, now: float) -> None:
         """Serial reference: schedule, charge, lower, and dispatch ONE
         decode step (the pre-pipeline loop, kept as the measured
         baseline and the bit-exactness oracle)."""
+        assert t.index < self.max_len, \
+            f"{t.tid}: decode past max_len {self.max_len}"
         sched = self._schedule_block(t, now)
         plan = self._lower_plan(t, sched)
         t.plans.append(plan)
@@ -533,45 +950,53 @@ class MultiTenantServer:
     # ------------------------------------------------------------ run --
     def run(self, steps: int = 16) -> Dict[str, Any]:
         t0 = time.time()
+        for t in self.tenants:
+            t.run_steps = 0
+            if t.admitted_wall is None or not t.outputs:
+                t.admitted_wall = t0   # TTFT clock starts with the run
         tokens_before = sum(t.tokens_served for t in self.tenants)
         if self.pipeline:
-            # split the step budget into epochs of (at most) epoch_len
-            # that never straddle a KV-window boundary: every step of an
-            # epoch then shares one static kv_len, matching the serial
-            # reference's per-step window bit-for-bit
-            epochs = []
-            base = self.tenants[0].index if self.tenants else 0
-            done = 0
-            while done < steps:
-                k = min(self.epoch_len, steps - done,
-                        LANE - ((base + done) % LANE))
-                epochs.append(k)
-                done += k
-            pending = self._plan_epoch(0.0, epochs[0]) if epochs else []
-            for e in range(len(epochs)):
+            pending = self._plan_epoch(0.0, steps)
+            while pending:
                 self._dispatch_epoch(pending)
-                if e + 1 < len(epochs):
-                    # one-epoch-ahead: epoch e is still executing on
-                    # device (async dispatch); schedule e+1 now
-                    pending = self._plan_epoch(time.time() - t0,
-                                               epochs[e + 1])
+                # one-epoch-ahead: this epoch is still executing on
+                # device (async dispatch); schedule the next one now
+                pending = self._plan_epoch(time.time() - t0, steps)
         else:
-            for _ in range(steps):
-                now = time.time() - t0   # once per step, not per tenant
-                order = self.tenants
+            while True:
+                now = time.time() - t0   # once per round, not per tenant
+                self._admit_due(steps)
+                self._process_departures()
+                self._sequential_prefills_due(now)
+                runnable = [t for t in self.tenants
+                            if self._decodable(t, steps)]
+                if not runnable:
+                    if self._queue:
+                        self._clock = max(self._clock + 1,
+                                          self._queue[0][2])
+                        continue
+                    break
+                order = runnable
                 if self.qos_targets:
-                    order = sorted(self.tenants,
+                    order = sorted(runnable,
                                    key=lambda t: self._slack(t, now))
                 for t in order:
                     self._serve_one_step(t, now)
+                self._clock += 1
         # hand bucketed caches back to their tenants, then fetch
         # device values exactly once, after the last epoch
         for name in list(self._bucket_caches):
             self._unstack_bucket(name)
-        if self.tenants:
-            jax.block_until_ready([t.token for t in self.tenants])
+        live = [t.token for t in self.tenants if t.token is not None]
+        if live:
+            jax.block_until_ready(live)
         wall = time.time() - t0
         served = sum(t.tokens_served for t in self.tenants) - tokens_before
+        # p95 over THIS run's admissions only (a warmed server keeps
+        # departed tenants from earlier scenario replays around)
+        ttfts = [t.ttft for t in self.tenants
+                 if t.ttft is not None and t.admitted_wall is not None
+                 and t.admitted_wall >= t0]
         return {
             "tenants": {
                 t.tid: {"tokens": t.tokens_served,
@@ -580,6 +1005,10 @@ class MultiTenantServer:
                         "lbm_frac": (sum(c.startswith("LBM")
                                          for c in t.choices)
                                      / max(1, len(t.choices))),
+                        "prompt_len": t.prompt_len,
+                        "prefill_chunks": list(t.chunks),
+                        "ttft_s": t.ttft,
+                        "departed": t.departed,
                         # full decoded history [B, total_steps], fetched
                         # here (the loop itself never pulled a value)
                         "output": (np.concatenate(
@@ -589,10 +1018,14 @@ class MultiTenantServer:
                 for t in self.tenants
             },
             "mode": "pipelined" if self.pipeline else "serial",
+            "admission": self.admission if self.pipeline else "sequential",
             "epoch_len": self.epoch_len if self.pipeline else 1,
             "wall_s": wall,
             "dram_bytes": self.nec.traffic.dram_total,
             "tokens_per_s": served / wall if wall > 0 else 0.0,
+            "prefill_tokens": sum(t.pf_pos for t in self.tenants),
+            "p95_ttft_s": (float(np.percentile(ttfts, 95)) if ttfts
+                           else None),
         }
 
 
@@ -606,17 +1039,43 @@ def main() -> None:
                     help="decode steps per scheduling epoch (grant hold)")
     ap.add_argument("--serial", action="store_true",
                     help="serial reference loop (schedule+dispatch per step)")
+    ap.add_argument("--arrivals", type=int, default=0,
+                    help="Poisson arrivals joining mid-run with prompts")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="arrivals per logical second (steps_per_s=1)")
+    ap.add_argument("--prompt-len", type=int, default=256,
+                    help="prompt tokens per arriving tenant")
+    ap.add_argument("--decode-budget", type=int, default=16,
+                    help="decode steps an arrival serves before departing")
+    ap.add_argument("--admission", choices=["interleaved", "sequential"],
+                    default="interleaved")
+    ap.add_argument("--max-len", type=int, default=512)
     args = ap.parse_args()
+    arrivals = None
+    if args.arrivals > 0:
+        arrivals = PoissonArrivals(
+            rate_per_s=args.arrival_rate, models=args.archs,
+            n_arrivals=args.arrivals, n_inferences=args.decode_budget,
+            prompt_len=args.prompt_len)
     srv = MultiTenantServer(args.archs, total_pages=args.pages,
                             epoch_len=args.epoch_len,
-                            pipeline=not args.serial)
+                            pipeline=not args.serial,
+                            max_len=args.max_len,
+                            arrivals=arrivals,
+                            admission=args.admission)
     out = srv.run(args.steps)
     for tid, info in out["tenants"].items():
+        ttft = (f", TTFT {info['ttft_s'] * 1e3:.0f}ms "
+                f"(chunks {info['prefill_chunks']})"
+                if info["ttft_s"] is not None else "")
         print(f"[serve] {tid}: {info['tokens']} tokens, "
               f"LBM {info['lbm_frac'] * 100:.0f}%, recent {info['choices']}, "
-              f"plans {info['plans']}")
-    print(f"[serve] {out['mode']} (K={out['epoch_len']}): "
-          f"{out['tokens_per_s']:.1f} tok/s total, "
+              f"plans {info['plans']}{ttft}")
+    p95 = (f", p95 TTFT {out['p95_ttft_s'] * 1e3:.0f}ms"
+           if out["p95_ttft_s"] is not None else "")
+    print(f"[serve] {out['mode']}/{out['admission']} "
+          f"(K={out['epoch_len']}): {out['tokens_per_s']:.1f} tok/s total, "
+          f"{out['prefill_tokens']} prompt tokens{p95}, "
           f"{out['dram_bytes'] / 2**20:.1f} MB modeled DRAM")
 
 

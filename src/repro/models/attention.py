@@ -58,11 +58,14 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
     """GQA attention.
 
     x: [B, S, d].  Training/prefill: kv_cache None -> self-attention over
-    x.  Decode: kv_cache {"k","v"} [B, L, Hkv, hd] + cache_index scalar
-    position -> one-step attention, returns the updated cache.  The
-    update is a single dynamic-update-slice on the caller's buffer, so
-    a donated cache (the serving epoch scan) is updated in place —
-    O(tokens written) per step, not O(cache bytes).
+    x.  Decode / chunked prefill: kv_cache {"k","v"} [B, L, Hkv, hd] +
+    cache_index scalar position -> the S new tokens (S == 1 for decode,
+    S == chunk for a prefill chunk) are written into the cache at
+    positions [cache_index, cache_index + S) and attend causally over
+    the cache prefix, returning the updated cache.  The update is a
+    single dynamic-update-slice on the caller's buffer, so a donated
+    cache (the serving epoch scan / chunk sequence) is updated in place
+    — O(tokens written) per step, not O(cache bytes).
 
     ``kv_len`` (static, decode only) bounds the attention read to the
     cache's first kv_len positions: positions beyond the current index
@@ -95,18 +98,19 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
         k = apply_rope(k, positions, cfg.rope_theta)
         if kv_cache is not None:
             assert cache_index is not None
-            k = kv_cache["k"].at[:, cache_index, :, :].set(k[:, 0])
-            v = kv_cache["v"].at[:, cache_index, :, :].set(v[:, 0])
+            k = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k,
+                                                    cache_index, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v,
+                                                    cache_index, axis=1)
             new_cache = {"k": k, "v": v}
             if kv_len is not None and kv_len < k.shape[1]:
                 k = jax.lax.slice_in_dim(k, 0, kv_len, axis=1)
                 v = jax.lax.slice_in_dim(v, 0, kv_len, axis=1)
             L = k.shape[1]
-            kpos = jnp.arange(L)
-            ok = kpos[None, :] <= cache_index
-            if cfg.sliding_window > 0:
-                ok &= kpos[None, :] > cache_index - cfg.sliding_window
-            bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)  # [1, L]
+            # causal bias over the cache prefix for queries at absolute
+            # positions cache_index + [0, S) — [S, L]
+            bias = _mask_bias(S, L, True, cfg.sliding_window,
+                              q_offset=cache_index)
         else:
             new_cache = None
             if (attn_plan is not None and causal

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.models.base import ArchConfig
 from repro.models.transformer import (decode_epoch, decode_step, encode,
-                                      init_caches, init_lm, lm_forward)
+                                      init_caches, init_lm, lm_forward,
+                                      prefill_chunk)
 from repro.optim import adamw
 
 
@@ -115,11 +116,19 @@ def make_train_step(cfg: ArchConfig, opt_cfg: Optional[adamw.AdamWConfig] = None
     return train_step
 
 
-def make_prefill(cfg: ArchConfig):
+def make_prefill(cfg: ArchConfig, serve: bool = False):
+    """One-shot prefill.  ``serve=True`` selects serving semantics —
+    drop-free MoE buckets and the unrolled shallow-stack group loop,
+    bit-identical to the chunked serving prefill
+    (:func:`repro.models.transformer.prefill_chunk`).  The default
+    keeps the scan-over-layers HLO and the dropping MoE capacity
+    factor: the dry-run dimensioning path models the same workload it
+    always did."""
     def prefill(params, batch, plan=None):
         prefix = batch.get("embeds_prefix")
         logits, _ = lm_forward(params, batch["tokens"], cfg,
-                               embeds_prefix=prefix, plan=plan)
+                               embeds_prefix=prefix, plan=plan,
+                               serve_prefill=serve)
         return logits[:, -1, :]
     return prefill
 
@@ -130,6 +139,27 @@ def _greedy_next_token(cfg: ArchConfig):
         logits = mask_padded_logits(logits, cfg)
         return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
     return next_token
+
+
+def make_prefill_chunk(cfg: ArchConfig):
+    """Cache-resuming prefill chunk for the continuous-batching server:
+    writes one prompt chunk's KV/SSM state into the live decode caches
+    at position ``index`` and returns (next_token [B, 1] — the greedy
+    token from the chunk's last position, meaningful only for the final
+    chunk of a prompt — and the updated caches).  ``kv_len`` is static;
+    jit with ``static_argnames=("kv_len",)`` and ``donate_argnums=(1,)``
+    so each (arch, chunk_len, kv_len) triple compiles once and the
+    caches update in place across the chunk sequence.  After the last
+    chunk the tenant flips to decode with no recompile: the decode step
+    consumes the same cache buffers and the returned token."""
+    next_token = _greedy_next_token(cfg)
+
+    def serve_prefill_chunk(params, caches, tokens, index, enc_out=None,
+                            kv_len=None):
+        logits, caches = prefill_chunk(params, tokens, caches, index, cfg,
+                                       enc_out=enc_out, kv_len=kv_len)
+        return next_token(logits)[:, None], caches
+    return serve_prefill_chunk
 
 
 def make_decode_epoch(cfg: ArchConfig):

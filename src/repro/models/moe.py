@@ -79,7 +79,8 @@ def _decode_moe(params: Params, x: jnp.ndarray, top_p: jnp.ndarray,
 
 
 def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
-              plan: Optional[Any] = None
+              plan: Optional[Any] = None, decode_fast: bool = True,
+              drop_free: bool = False
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: [G, T, d] -> (y: [G, T, d], aux_loss scalar).
 
@@ -89,11 +90,23 @@ def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
     core.plan.FfnPlan) each expert's SwiGLU runs through the
     plan-lowered Pallas kernels instead of the batched einsums.
     Decode-shaped calls (T == 1) skip the capacity buckets entirely —
-    see :func:`_decode_moe`.
-    """
+    see :func:`_decode_moe` — unless ``decode_fast=False``: a PREFILL
+    caller must force the bucket path even for a one-token tail chunk,
+    because the two paths differ in float summation order and the
+    chunked-prefill == one-shot-prefill contract is bitwise.
+
+    ``drop_free=True`` sizes the buckets so NO token can overflow (an
+    expert receives at most T entries — each token contributes one per
+    distinct chosen expert).  The chunked-prefill path requires this:
+    the dropping capacity is a function of T, so a token kept by
+    ``capacity(P)`` in a one-shot prefill could be dropped by
+    ``capacity(chunk)`` inside a chunk (or vice versa), silently
+    breaking the bitwise contract exactly when the router is
+    imbalanced.  Training keeps the dropping semantics (the capacity
+    factor is part of the modeled workload)."""
     G, T, d = x.shape
     E, K = cfg.num_experts, cfg.experts_per_token
-    C = capacity(T, cfg)
+    C = max(4, -(-T // 4) * 4) if drop_free else capacity(T, cfg)
 
     logits = jnp.einsum("gtd,de->gte", x, params["router"],
                         preferred_element_type=jnp.float32)
@@ -107,7 +120,7 @@ def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
         1.0 / (G * T * K))
     aux = E * jnp.sum(me * ce)
 
-    if T == 1:
+    if T == 1 and decode_fast:
         return _decode_moe(params, x, top_p, top_e), aux
 
     def dispatch_group(xg, eg, pg):

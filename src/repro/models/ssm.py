@@ -130,7 +130,16 @@ def mamba2_forward(params: Params, x: jnp.ndarray, cfg: ArchConfig,
 
     ``chunk`` overrides the architecture's SSD chunk (the KernelPlan
     path: a smaller page grant lowers to a smaller intra-chunk working
-    set); it applies only when it divides the sequence length."""
+    set); it applies only when it divides the sequence length.
+
+    A sequence that is NOT a multiple of the SSD chunk runs the aligned
+    prefix through the chunked scan and the remainder as one final
+    chunk of its own length, carrying the inter-chunk state across the
+    split.  The segmentation is therefore ``[chunk]*n + [tail]`` — the
+    same segmentation a *chunked prefill* at chunk-aligned boundaries
+    produces — so chunked prefill with state carry is bit-identical to
+    the one-shot forward for any prompt length
+    (tests/test_continuous_batching.py)."""
     b, s, d = x.shape
     ssd_chunk_len = cfg.ssm_chunk
     if chunk and chunk > 0 and s % chunk == 0:
@@ -153,7 +162,21 @@ def mamba2_forward(params: Params, x: jnp.ndarray, cfg: ArchConfig,
     xh = shard_hint(xh, ("data", None, "model", None))
     dt = shard_hint(dt, ("data", None, "model"))
     h0 = state["ssm"] if state else None
-    y, hfin = ssd(xh, dt, A, B, C, params["D"], ssd_chunk_len, h0)
+    s_main = (s // ssd_chunk_len) * ssd_chunk_len
+    if s_main == s:
+        y, hfin = ssd(xh, dt, A, B, C, params["D"], ssd_chunk_len, h0)
+    else:
+        parts, hfin = [], h0
+        if s_main:
+            y1, hfin = ssd(xh[:, :s_main], dt[:, :s_main], A,
+                           B[:, :s_main], C[:, :s_main], params["D"],
+                           ssd_chunk_len, hfin)
+            parts.append(y1)
+        y2, hfin = ssd(xh[:, s_main:], dt[:, s_main:], A,
+                       B[:, s_main:], C[:, s_main:], params["D"],
+                       s - s_main, hfin)
+        parts.append(y2)
+        y = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
     y = y.reshape(b, s, di)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     out = linear(params["out_proj"], y)

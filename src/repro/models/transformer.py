@@ -119,7 +119,7 @@ def init_lm(key, cfg: ArchConfig) -> Params:
 # ------------------------------------------------------------- blocks --
 def _dense_block(p: Params, x, cfg: ArchConfig, *, causal=True, kv_cache=None,
                  cache_index=None, kv_len=None, positions=None, xattn_kv=None,
-                 xp=None, plan=None):
+                 xp=None, plan=None, moe_fast=True, moe_drop_free=False):
     h, new_cache = mha(p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps), cfg,
                        causal=causal, kv_cache=kv_cache,
                        cache_index=cache_index, kv_len=kv_len,
@@ -134,7 +134,9 @@ def _dense_block(p: Params, x, cfg: ArchConfig, *, causal=True, kv_cache=None,
     y = rms_norm(p["ln2"], x, cfg.norm_eps)
     ffn_plan = plan.ffn if plan is not None else None
     if cfg.is_moe:
-        out, aux = moe_apply(p["mlp"], y, cfg, plan=ffn_plan)
+        out, aux = moe_apply(p["mlp"], y, cfg, plan=ffn_plan,
+                             decode_fast=moe_fast,
+                             drop_free=moe_drop_free)
     else:
         out = ffn(p["mlp"], y, plan=ffn_plan)
     return x + out, new_cache, aux
@@ -157,6 +159,7 @@ def lm_forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig, *,
                embeds_prefix: Optional[jnp.ndarray] = None,
                remat: bool = False,
                plan=None,
+               serve_prefill: bool = False,
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Training / prefill forward.  tokens: [B, S] -> logits [B, S, V].
 
@@ -165,6 +168,18 @@ def lm_forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig, *,
     ``plan`` (a static core.plan.KernelPlan) executes FFN/attention/SSD
     through the plan-lowered Pallas kernels.  Returns (logits,
     moe_aux_loss).
+
+    ``serve_prefill=True`` selects the SERVING one-shot-prefill
+    semantics: drop-free MoE buckets (the kept-token set must not
+    depend on how a prompt is chunked — :func:`repro.models.moe
+    .moe_apply`) and, for shallow stacks
+    (<= ``_DECODE_UNROLL_MAX_GROUPS`` groups, no remat), the same
+    unrolled group loop the decode/prefill-chunk paths use — so
+    ``make_prefill(cfg, serve=True)`` is bit-identical to the cached
+    chunked prefill (:func:`prefill_chunk`): same per-group param
+    slices, same float association.  The default keeps the compact
+    scan-over-layers HLO and the dropping MoE capacity factor — the
+    dry-run dimensioning and training paths are unchanged.
     """
     x = embed(params["embed"], tokens)
     if embeds_prefix is not None:
@@ -189,32 +204,45 @@ def lm_forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig, *,
             x, _ = jax.lax.scan(ssm_step, x, gp["ssm"],
                                 unroll=max(1, cfg.attn_every - 1))
             x, _, a = _dense_block(params["shared_attn"], x, cfg,
-                                   positions=positions, plan=plan)
+                                   positions=positions, plan=plan,
+                                   moe_fast=False,
+                                   moe_drop_free=serve_prefill)
             aux = aux + a
         elif cfg.family == "ssm":
             x, _ = _ssm_block(gp, x, cfg, plan=plan)
         elif cfg.family == "encdec":
             lp, xp = gp
             x, _, a = _dense_block(lp, x, cfg, positions=positions,
-                                   xattn_kv=enc_out, xp=xp, plan=plan)
+                                   xattn_kv=enc_out, xp=xp, plan=plan,
+                                   moe_fast=False,
+                                   moe_drop_free=serve_prefill)
             aux = aux + a
         else:
             x, _, a = _dense_block(gp, x, cfg, positions=positions,
-                                   plan=plan)
+                                   plan=plan, moe_fast=False,
+                                   moe_drop_free=serve_prefill)
             aux = aux + a
         x = shard_hint(x, ("data", None, None))
         return (x, aux), None
 
+    layer_stack = params["layers"] if cfg.family != "encdec" else (
+        params["layers"], params["xattn"])
+    G = num_groups(cfg)
     if remat:
         policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
                   if _REMAT_POLICY == "dots" else None)
         fn = jax.checkpoint(group_fn, prevent_cse=False, policy=policy)
+        (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), layer_stack,
+                                   unroll=_SCAN_UNROLL)
+    elif serve_prefill and G <= _DECODE_UNROLL_MAX_GROUPS:
+        carry = (x, jnp.float32(0.0))
+        for g in range(G):
+            gp = jax.tree_util.tree_map(lambda p: p[g], layer_stack)
+            carry, _ = group_fn(carry, gp)
+        x, aux = carry
     else:
-        fn = group_fn
-    layer_stack = params["layers"] if cfg.family != "encdec" else (
-        params["layers"], params["xattn"])
-    (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), layer_stack,
-                               unroll=_SCAN_UNROLL)
+        (x, aux), _ = jax.lax.scan(group_fn, (x, jnp.float32(0.0)),
+                                   layer_stack, unroll=_SCAN_UNROLL)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params["embed"], x)
     return logits, aux
@@ -385,5 +413,101 @@ def decode_step(params: Params, token: jnp.ndarray, caches, index: jnp.ndarray,
             unroll=_SCAN_UNROLL)
 
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, new_caches
+
+
+def prefill_chunk(params: Params, tokens: jnp.ndarray, caches,
+                  index: jnp.ndarray, cfg: ArchConfig,
+                  enc_out: Optional[jnp.ndarray] = None,
+                  kv_len: Optional[int] = None
+                  ) -> Tuple[jnp.ndarray, Any]:
+    """One cache-resuming prefill chunk: forward ``tokens`` [B, S] at
+    absolute positions [index, index + S), writing their KV / SSM state
+    into the live decode caches, and return the LAST position's logits
+    [B, 1, V] plus the updated caches.
+
+    This is the chunked-prefill work item of the continuous-batching
+    server: a prompt is consumed as a sequence of chunks (sizes chosen
+    per chunk from the tenant's cache grant), each resuming from the
+    partially filled caches, and the final chunk's logits seed the
+    decode loop — no recompile of the decode path, which sees exactly
+    the caches a one-shot prefill would have produced.
+
+    Bitwise contract (tests/test_continuous_batching.py): splitting a
+    prompt into chunks at LANE-aligned boundaries (multiples of the SSD
+    chunk for SSM/hybrid archs) is bit-identical to one chunk covering
+    the whole prompt — attention writes/reads only live positions, SSM
+    segmentation is preserved (:func:`repro.models.ssm.mamba2_forward`),
+    and MoE routes through DROP-FREE capacity buckets (``moe_fast=False,
+    moe_drop_free=True``: the dropping capacity is a function of the
+    chunk length, so capacity drops would make the kept-token set
+    chunking-dependent).  To keep that contract independent
+    of the scheduler, the chunk executes the reference jnp path: the
+    tenant's granted KernelPlan decides the chunk's *size* and its NEC
+    charge at the serving layer, not the kernel numerics.
+
+    Requires index + S <= max_len (and <= kv_len when given)."""
+    x = embed(params["embed"], tokens)
+    S = x.shape[1]
+    positions = (jnp.arange(S, dtype=jnp.int32)[None, :]
+                 + jnp.asarray(index, jnp.int32))
+    G = num_groups(cfg)
+    layer_stack = params["layers"] if cfg.family != "encdec" else (
+        params["layers"], params["xattn"])
+
+    def run_group(x, gp, xp, cache):
+        if cfg.family == "hybrid":
+            def ssm_step(xc, sp_state):
+                sp, st = sp_state
+                y, new_st = _ssm_block(sp, xc, cfg, state=st, decode=False)
+                return y, new_st
+            x, new_ssm = jax.lax.scan(ssm_step, x,
+                                      (gp["ssm"], cache["ssm"]),
+                                      unroll=max(1, cfg.attn_every - 1))
+            x, new_kv, _ = _dense_block(params["shared_attn"], x, cfg,
+                                        kv_cache=cache["attn"],
+                                        cache_index=index, kv_len=kv_len,
+                                        positions=positions, moe_fast=False,
+                                        moe_drop_free=True)
+            return x, {"ssm": new_ssm, "attn": new_kv}
+        if cfg.family == "ssm":
+            return _ssm_block(gp, x, cfg, state=cache, decode=False)
+        x, new_kv, _ = _dense_block(gp, x, cfg, kv_cache=cache,
+                                    cache_index=index, kv_len=kv_len,
+                                    positions=positions,
+                                    xattn_kv=enc_out, xp=xp,
+                                    moe_fast=False, moe_drop_free=True)
+        return x, new_kv
+
+    if G <= _DECODE_UNROLL_MAX_GROUPS:
+        new_caches = list(caches)
+        for g in range(G):
+            stk = jax.tree_util.tree_map(lambda p: p[g], layer_stack)
+            gp, xp = stk if cfg.family == "encdec" else (stk, None)
+            x, new_caches[g] = run_group(x, gp, xp, new_caches[g])
+        new_caches = tuple(new_caches)
+    else:
+        def group_fn(carry, scan_in):
+            x, caches = carry
+            if cfg.family == "encdec":
+                (gp, xp), g = scan_in
+            else:
+                (gp, g), xp = scan_in, None
+            cache = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, g, 0,
+                                                       keepdims=False),
+                caches)
+            x, new_cache = run_group(x, gp, xp, cache)
+            caches = jax.tree_util.tree_map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n, g, 0),
+                caches, new_cache)
+            return (x, caches), None
+
+        (x, new_caches), _ = jax.lax.scan(
+            group_fn, (x, caches), (layer_stack, jnp.arange(G)),
+            unroll=_SCAN_UNROLL)
+
+    x = rms_norm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
     logits = unembed(params["embed"], x)
     return logits, new_caches

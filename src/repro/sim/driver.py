@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.allocator import DynamicCacheAllocator
 from repro.core.cache import CacheConfig, SharedCache
@@ -52,24 +52,36 @@ class SimConfig:
 
 @dataclasses.dataclass
 class TenantSpec:
-    """One tenant of a dynamic-tenancy scenario."""
-    model: ModelGraph
+    """One tenant of a dynamic-tenancy scenario.
+
+    ``model`` is the tenant's layer graph in the analytic simulator; the
+    real serving path (:class:`repro.launch.serve.MultiTenantServer`)
+    accepts the same spec with an *arch id string* instead, plus a
+    ``prompt_len``: the tenant then arrives mid-run with a real prompt
+    that is prefilled (chunked, cache-aware) before it decodes
+    ``n_inferences`` tokens and departs — one arrival vocabulary shared
+    by the simulator and the server."""
+    model: Union[ModelGraph, str]
     arrive_at: float = 0.0           # seconds into the run
     n_inferences: Optional[int] = None   # depart after this many (None = horizon)
     qos_ms: Optional[float] = None   # per-tenant latency target override
     group_size: int = 1
+    prompt_len: int = 0              # serving: prompt tokens to prefill
 
 
 @dataclasses.dataclass
 class PoissonArrivals:
     """Open-loop arrival process: ``n_arrivals`` tenants drawn from
     ``models`` join at exponential inter-arrival gaps and depart after
-    ``n_inferences`` inferences (pages reclaimed on departure)."""
+    ``n_inferences`` inferences (pages reclaimed on departure).
+    ``prompt_len`` rides along to the serving path (ignored by the
+    analytic simulator, whose inferences carry no token prompts)."""
     rate_per_s: float
-    models: List[ModelGraph]
+    models: List[Union[ModelGraph, str]]
     n_arrivals: int = 8
     n_inferences: Optional[int] = 4
     seed: int = 0
+    prompt_len: int = 0
 
     def specs(self) -> List[TenantSpec]:
         rng = random.Random(self.seed)
@@ -77,7 +89,8 @@ class PoissonArrivals:
         for _ in range(self.n_arrivals):
             t += rng.expovariate(self.rate_per_s)
             out.append(TenantSpec(rng.choice(self.models), arrive_at=t,
-                                  n_inferences=self.n_inferences))
+                                  n_inferences=self.n_inferences,
+                                  prompt_len=self.prompt_len))
         return out
 
 
