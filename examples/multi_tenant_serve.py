@@ -17,10 +17,17 @@ admission (TTFT, chunk traces) as well as in kernel selection.  Compare
 --admission sequential for the static-batching baseline (arrivals wait
 for the batch to drain, then whole-prompt prefill): decode outputs are
 bit-identical, TTFT is not.
+
+Fleet mode — ``--devices N`` splits the host CPU into N XLA devices
+(launch/env.py must win the race with backend init, hence the lazy
+import in main) and serves the same workload as N replica chips behind
+the least-loaded admission router, each with its own CaMDN allocator:
+
+  PYTHONPATH=src python examples/multi_tenant_serve.py --devices 4
 """
 import argparse
 
-from repro.launch.serve import MultiTenantServer
+from repro.launch.serve import FleetServer, MultiTenantServer
 from repro.sim.driver import TenantSpec
 
 
@@ -51,6 +58,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=512)
     ap.add_argument("--admission", default="interleaved",
                     choices=["interleaved", "sequential"])
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fleet mode: split the host into N XLA devices and "
+                         "serve the workload over N replica chips, each with "
+                         "its own CaMDN allocator")
     args = ap.parse_args()
 
     arrivals = [
@@ -59,6 +70,29 @@ def main():
         TenantSpec("mamba2-370m", arrive_at=8.0, n_inferences=16,
                    prompt_len=args.prompt_len),
     ]
+
+    if args.devices > 0:
+        from repro.launch.env import describe, set_host_device_count
+        set_host_device_count(args.devices)
+        print(f"fleet: {args.devices} replica chips x {args.pages} pages, "
+              f"least-loaded admission of {len(args.archs)} resident + "
+              f"{len(arrivals)} arriving tenants ({describe()})")
+        fleet = FleetServer(n_replicas=args.devices, arch_ids=args.archs,
+                            pages_per_replica=args.pages,
+                            max_len=2 * args.prompt_len, tenants=arrivals)
+        out = fleet.run(args.steps)
+        for rep in out["replicas"]:
+            print(f"  {rep['replica']}: {rep['tokens_served']} tokens | "
+                  f"page util {rep['page_util_mean'] * 100:.0f}% | "
+                  f"tenants {rep['tenants']}")
+        print(f"  routed: " + ", ".join(
+            f"{tid}->r{r}" for tid, r in out["routes"]))
+        p95 = (f", p95 TTFT {out['p95_ttft_s'] * 1e3:.0f}ms"
+               if out["p95_ttft_s"] is not None else "")
+        print(f"  fleet throughput {out['tokens_per_s']:.1f} tok/s, "
+              f"page-util balance {out['page_util_balance']:.2f}{p95}")
+        return
+
     print(f"serving {args.archs} with a {args.pages}-page shared pool; "
           f"2 tenants arrive mid-run with {args.prompt_len}-token prompts "
           f"({args.admission} admission)")

@@ -21,6 +21,15 @@ plus ``attach``/``detach`` for dynamic tenancy (open-loop arrivals and
 departures with page reclamation).  Keeping one protocol means every
 comparison is apples-to-apples: one task state machine, one traffic
 ledger, one event engine — the policies differ only in *decisions*.
+
+Fleet serving (launch/serve.py FleetServer) scales the co-design across
+a device mesh: every replica chip owns a full control stack — its own
+SharedCache page pool, NEC ledger, DynamicCacheAllocator, and
+CamdnPolicy — bundled as a :class:`ReplicaControl` and handed out by a
+:class:`ReplicaAllocators` registry keyed by replica id.  Nothing is
+shared between replicas: one chip's grant pressure can never starve a
+tenant on another chip, which is exactly the paper's model-exclusive
+region guarantee lifted to the fleet level.
 """
 from __future__ import annotations
 
@@ -252,3 +261,65 @@ class StaticQuotaPolicy:
     def on_layer_end(self, task, now: float) -> None:
         release_after_layer(task)
         task.advance_layer(now)
+
+
+# ---------------------------------------------------------------------------
+# Per-replica control stacks (fleet serving).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ReplicaControl:
+    """One replica chip's full CaMDN control stack: the page pool it
+    exclusively owns plus the NEC ledger / allocator / policy arbitrating
+    it.  Constructed via :meth:`build` so every replica gets the same
+    cache geometry with zero sharing."""
+
+    replica: str
+    cache: "SharedCache"
+    nec: "Nec"
+    alloc: DynamicCacheAllocator
+    policy: CachePolicy
+
+    @classmethod
+    def build(cls, replica: str, cache_config) -> "ReplicaControl":
+        from repro.core.cache import SharedCache
+        from repro.core.nec import Nec
+        cache = SharedCache(cache_config)
+        nec = Nec(cache)
+        alloc = DynamicCacheAllocator(cache)
+        return cls(replica, cache, nec, alloc, CamdnPolicy(alloc))
+
+    # -- feedback the fleet router consumes ----------------------------
+    @property
+    def used_pages(self) -> int:
+        return self.cache.config.num_pages - self.cache.free_pages
+
+    @property
+    def utilization(self) -> float:
+        return self.used_pages / max(1, self.cache.config.num_pages)
+
+    @property
+    def dram_bytes(self) -> int:
+        return self.nec.traffic.dram_total
+
+
+class ReplicaAllocators:
+    """Registry of per-replica control stacks, keyed by replica id.
+    ``get`` builds a replica's stack on first use — every chip in the
+    serving mesh gets an identical-geometry, fully independent pool."""
+
+    def __init__(self, cache_config):
+        self.cache_config = cache_config
+        self._controls: Dict[str, ReplicaControl] = {}
+
+    def get(self, replica: str) -> ReplicaControl:
+        ctl = self._controls.get(replica)
+        if ctl is None:
+            ctl = self._controls[replica] = ReplicaControl.build(
+                replica, self.cache_config)
+        return ctl
+
+    def __iter__(self):
+        return iter(self._controls.values())
+
+    def utilizations(self) -> Dict[str, float]:
+        return {r: c.utilization for r, c in self._controls.items()}

@@ -91,11 +91,16 @@ class TenantTask:
     def __init__(self, task_id: str, model: TenantModel, cache: SharedCache,
                  nec: Nec,
                  policy: Union[CachePolicy, DynamicCacheAllocator],
-                 group_size: int = 1, deadline_s: float = math.inf):
+                 group_size: int = 1, deadline_s: float = math.inf,
+                 replica: str = ""):
         self.id = task_id
         self.model = model
         self.cache = cache
         self.nec = nec
+        # fleet serving: which replica chip's control stack this task
+        # allocates against ("" on a single-device server) — the label
+        # the allocation trace and the fleet router key on
+        self.replica = replica
         # Epoch-granular serving: how many identical executions of the
         # current layer the next grant covers.  A serving loop that holds
         # one grant for a K-step decode epoch sets this to K so the

@@ -218,6 +218,75 @@ def zero_shardings(opt_shapes: Any, params_shape: Any, mesh: Mesh) -> Any:
         is_leaf=lambda x: isinstance(x, P))
 
 
+# ---------------------------------------------------------------------------
+# Decode-cache shardings.  The PR 4 decode signatures carry caches as a
+# TUPLE of independent per-group buffers for shallow stacks ([B, ...]
+# leaves, batch at axis 0) or one stacked array for deep stacks
+# ([G, B, ...] leaves, batch at axis 1) — these helpers locate the batch
+# axis per leaf instead of assuming a layout, which is what lets one
+# rule set serve both signatures (and the hybrid caches that mix them).
+# ---------------------------------------------------------------------------
+def cache_specs(caches, mesh: Mesh, batch: int, *, mode: str = "minor") -> Any:
+    """PartitionSpec pytree for decode caches (KV buffers, SSM state,
+    conv tails): batch over 'data' when divisible, plus one
+    'model'-sharded dim per leaf for tensor-parallel replica groups.
+
+    mode="minor": shard the most-minor divisible dim over 'model'
+    (typically head_dim — matches the head-sharded attention
+    projections in :func:`param_specs`).  mode="seq": shard the LONGEST
+    dim — the KV sequence — over 'model' so every chip attends over a
+    KV slice and combines via the softmax reductions (the flash-decode
+    variant), instead of replicating attention compute."""
+    data = mesh.shape.get("data", 1)
+    model = mesh.shape.get("model", 1)
+
+    def spec_for(leaf) -> P:
+        nd = leaf.ndim
+        s: list = [None] * nd
+        b_ax = None
+        if nd >= 2 and leaf.shape[1] == batch:
+            b_ax = 1
+        elif nd >= 1 and leaf.shape[0] == batch:
+            b_ax = 0
+        if b_ax is not None and batch % data == 0:
+            s[b_ax] = "data"
+        # axes past the batch axis are eligible for model/data sharding
+        lo = (b_ax + 1) if b_ax is not None else 1
+        if mode == "seq":
+            best, bi = 0, None
+            for i in range(lo, nd):
+                if s[i] is None and leaf.shape[i] % model == 0 \
+                        and leaf.shape[i] > best:
+                    best, bi = leaf.shape[i], i
+            if bi is not None and best >= model:
+                s[bi] = "model"
+        else:
+            for i in range(nd - 1, lo - 1, -1):
+                if s[i] is None and leaf.shape[i] % model == 0 \
+                        and leaf.shape[i] >= model:
+                    s[i] = "model"
+                    break
+        if b_ax is not None and s[b_ax] is None:
+            best, bi = 0, None
+            for i in range(lo, nd):
+                if s[i] is None and leaf.shape[i] % data == 0 \
+                        and leaf.shape[i] > best:
+                    best, bi = leaf.shape[i], i
+            if bi is not None:
+                s[bi] = "data"
+        return P(*s)
+
+    return jax.tree_util.tree_map(spec_for, caches)
+
+
+def cache_shardings(caches, mesh: Mesh, batch: int,
+                    *, mode: str = "minor") -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        cache_specs(caches, mesh, batch, mode=mode),
+        is_leaf=lambda x: isinstance(x, P))
+
+
 def batch_spec(mesh: Mesh) -> P:
     """Global batch sharded over every data-parallel axis present."""
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -56,54 +56,10 @@ def _batch_shardings(mesh, batch_sds: Dict[str, Any]):
 
 
 def _cache_shardings(mesh, caches_sds, batch: int, mode: str = "minor"):
-    """Decode caches: batch over data when divisible.
-
-    mode="minor" (baseline): shard the most-minor divisible dim over
-    'model' (typically head_dim).  mode="seq" (§Perf flash-decode
-    variant): shard the LONGEST dim — the KV sequence — over 'model' so
-    every chip attends over a KV slice and combines via the softmax
-    reductions, instead of replicating attention compute."""
-    data = mesh.shape.get("data", 1)
-    model = mesh.shape.get("model", 1)
-
-    def spec_for(leaf):
-        nd = leaf.ndim
-        s: list = [None] * nd
-        # deep stacks carry stacked [G, B, ...] leaves (batch at axis 1);
-        # shallow stacks use per-group tuple caches whose leaves are
-        # [B, ...] (batch at axis 0) — locate the batch axis, don't
-        # assume the stacked layout
-        b_ax = None
-        if nd >= 2 and leaf.shape[1] == batch:
-            b_ax = 1
-        elif nd >= 1 and leaf.shape[0] == batch:
-            b_ax = 0
-        if b_ax is not None and batch % data == 0:
-            s[b_ax] = "data"
-        # axes past the batch axis are eligible for model/data sharding
-        lo = (b_ax + 1) if b_ax is not None else 1
-        if mode == "seq":
-            best, bi = 0, None
-            for i in range(lo, nd):
-                if s[i] is None and leaf.shape[i] % model == 0 and leaf.shape[i] > best:
-                    best, bi = leaf.shape[i], i
-            if bi is not None and best >= model:
-                s[bi] = "model"
-        else:
-            for i in range(nd - 1, lo - 1, -1):
-                if s[i] is None and leaf.shape[i] % model == 0 and leaf.shape[i] >= model:
-                    s[i] = "model"
-                    break
-        if b_ax is not None and s[b_ax] is None:
-            best, bi = 0, None
-            for i in range(lo, nd):
-                if s[i] is None and leaf.shape[i] % data == 0 and leaf.shape[i] > best:
-                    best, bi = leaf.shape[i], i
-            if bi is not None:
-                s[bi] = "data"
-        return NamedSharding(mesh, P(*s))
-
-    return jax.tree_util.tree_map(spec_for, caches_sds)
+    """Decode-cache shardings — the tuple-cache-aware rules live in
+    :func:`repro.distributed.sharding.cache_shardings` (shared with the
+    serving fleet's tensor-parallel replica groups)."""
+    return sharding.cache_shardings(caches_sds, mesh, batch, mode=mode)
 
 
 def _apply_opt(cfg: ArchConfig, opt: str) -> ArchConfig:

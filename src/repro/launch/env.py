@@ -1,0 +1,89 @@
+"""Launcher hygiene: process-environment knobs that must be set before
+the first JAX backend initialization, in one place.
+
+Measured tokens/s should reflect device work, not launcher accidents, so
+every entry point that benchmarks or serves (``benchmarks/run.py``,
+``examples/multi_tenant_serve.py``, ``repro.launch.serve --devices``)
+routes through these helpers instead of hand-rolling ``os.environ``
+writes:
+
+* **Host device count** — ``--xla_force_host_platform_device_count=N``
+  splits the host CPU into N XLA devices, which is what makes fleet
+  meshes (launch/mesh.py) fully testable on CPU CI.  JAX locks the
+  device count at first backend init, so the flag is only effective
+  before any ``jax.devices()`` / first op; :func:`set_host_device_count`
+  merges it into ``XLA_FLAGS`` (preserving unrelated flags) and fails
+  loudly if the backend already initialized with a different count.
+* **Compilation cache** — ``JAX_COMPILATION_CACHE_DIR`` persists XLA
+  executables across processes, so repeated bench/CI runs skip
+  recompiles of the (stable) fused epoch programs.
+* **tcmalloc** — glibc malloc serializes the multi-threaded XLA:CPU
+  runtime under the allocation churn of many small per-tenant buffers.
+  ``LD_PRELOAD`` cannot be set from inside the process (the loader has
+  already run), so launchers that care should prefix:
+
+      LD_PRELOAD=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \\
+          python benchmarks/run.py ...
+
+  :func:`describe` reports whether it is active.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Optional
+
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+TCMALLOC_PATH = "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4"
+
+
+def merge_xla_flag(flags: str, flag: str, value) -> str:
+    """Set ``flag=value`` inside an XLA_FLAGS string, replacing an
+    existing assignment of the same flag and preserving everything
+    else."""
+    new = f"{flag}={value}"
+    pat = re.compile(rf"{re.escape(flag)}=\S+")
+    if pat.search(flags):
+        return pat.sub(new, flags)
+    return f"{flags} {new}".strip()
+
+
+def set_host_device_count(n: int,
+                          compilation_cache: Optional[str] = None) -> int:
+    """Force the host CPU platform to expose ``n`` XLA devices (and
+    optionally point the persistent compilation cache at a directory).
+
+    Must run before the first backend initialization; verifies the
+    backend actually came up with ``n`` CPU devices and raises if a
+    too-early jax call already pinned a different count — silently
+    serving a "fleet" on one device is the failure mode this guards."""
+    n = int(n)
+    assert n >= 1, n
+    os.environ["XLA_FLAGS"] = merge_xla_flag(
+        os.environ.get("XLA_FLAGS", ""), _COUNT_FLAG, n)
+    if compilation_cache:
+        os.environ.setdefault("JAX_COMPILATION_CACHE_DIR",
+                              str(compilation_cache))
+    import jax
+    got = jax.device_count()
+    if jax.default_backend() == "cpu" and got != n:
+        raise RuntimeError(
+            f"host platform initialized with {got} devices, wanted {n}: "
+            f"set_host_device_count must run before the first jax device "
+            f"use (or set XLA_FLAGS='{_COUNT_FLAG}={n}' in the launcher "
+            f"environment)")
+    return got
+
+
+def tcmalloc_active() -> bool:
+    return "tcmalloc" in os.environ.get("LD_PRELOAD", "")
+
+
+def describe() -> str:
+    """One-line launcher-environment summary for bench/serve logs."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(rf"{_COUNT_FLAG}=(\d+)", flags)
+    return (f"host_devices={m.group(1) if m else 'default'} "
+            f"tcmalloc={'on' if tcmalloc_active() else 'off'} "
+            f"compile_cache="
+            f"{os.environ.get('JAX_COMPILATION_CACHE_DIR', 'off')}")

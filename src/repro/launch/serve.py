@@ -88,6 +88,7 @@ is the serving-side reproduction of the paper's runtime behaviour.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import math
 import time
@@ -97,23 +98,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.allocator import DynamicCacheAllocator, Selection
-from repro.core.cache import CacheConfig, SharedCache
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.allocator import Selection
+from repro.core.cache import CacheConfig
 from repro.core.mapping import MapperConfig
 from repro.core.mct import MCT, ModelMapping
-from repro.core.nec import Nec
 from repro.core.plan import KernelPlan, lower_prefill_chunk
-from repro.core.policy import CamdnPolicy
+from repro.core.policy import ReplicaAllocators, ReplicaControl
 from repro.core.runtime import TenantModel, TenantTask
 from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph, \
     ceil_div
 from repro.core.vmem import (LANE, PAGE_BYTES, VMEM_PAGES, fused_ffn_pages,
                              lower_selection)
+from repro.distributed import sharding as shard
 from repro.models import model as M
 from repro.models.base import ArchConfig, get_arch
 from repro.models.ssm import CONV_K
 from repro.models.transformer import init_caches, num_groups
-from repro.sim.driver import PoissonArrivals, TenantSpec
+from repro.sim.driver import FleetScenario, PoissonArrivals, TenantSpec
 
 
 def _elem_bytes(cfg: ArchConfig) -> int:
@@ -240,7 +243,9 @@ class MultiTenantServer:
                  arrivals: Optional[PoissonArrivals] = None,
                  admission: str = "interleaved",
                  prefill_chunk: int = 2 * LANE,
-                 steps_per_s: float = 1.0):
+                 steps_per_s: float = 1.0,
+                 device: Any = None, replica: str = "",
+                 control: Optional[ReplicaControl] = None):
         assert admission in ("interleaved", "sequential"), admission
         self.qos_targets = qos_targets or {}
         self.epoch_len = max(1, int(epoch_len))
@@ -248,17 +253,35 @@ class MultiTenantServer:
         self.admission = admission
         self.prefill_block = max(LANE, int(prefill_chunk))
         self.steps_per_s = steps_per_s
+        # Fleet placement: ``device`` pins every tenant's params /
+        # caches / feedback token to one chip (jax.device_put commits
+        # them, and committed inputs drive where each jit executes), or
+        # carries a per-replica (1, tp) submesh for tensor-parallel
+        # replica groups (params/caches device_put with the
+        # distributed.sharding specs; shard_hint activates during
+        # tracing via use_mesh).  None (the default) keeps the seed
+        # single-device behaviour untouched.
+        self.mesh = device if isinstance(device, Mesh) else None
+        if self.mesh is not None and self.mesh.devices.size == 1:
+            device, self.mesh = self.mesh.devices.flat[0], None
+        self.device = device
+        self.replica = replica
         # VMEM page pool modeled by the same SharedCache/allocator the
-        # simulator uses — one CacheConfig with page-granular VMEM
-        # the whole pool is CaMDN-schedulable VMEM (XLA's reserved slice
-        # is already subtracted in core.vmem.VMEM_BYTES)
-        self.cache = SharedCache(CacheConfig(
-            total_bytes=total_pages * PAGE_BYTES,
-            num_slices=1, num_ways=1, npu_ways=1,
-            page_bytes=PAGE_BYTES))
-        self.nec = Nec(self.cache)
-        self.alloc = DynamicCacheAllocator(self.cache)
-        self.policy = CamdnPolicy(self.alloc)
+        # simulator uses — bundled as one per-replica ReplicaControl
+        # stack (fleet replicas pass theirs in, keyed by replica id; a
+        # standalone server builds a private one).  The whole pool is
+        # CaMDN-schedulable VMEM (XLA's reserved slice is already
+        # subtracted in core.vmem.VMEM_BYTES).
+        self.control = control or ReplicaControl.build(
+            replica or "solo", CacheConfig(
+                total_bytes=total_pages * PAGE_BYTES,
+                num_slices=1, num_ways=1, npu_ways=1,
+                page_bytes=PAGE_BYTES))
+        self.cache = self.control.cache
+        self.nec = self.control.nec
+        self.alloc = self.control.alloc
+        self.policy = self.control.policy
+        total_pages = self.cache.config.num_pages
         self.mapper = _vmem_mapper(total_pages)
         self.tenants: List[Tenant] = []
         self.batch = batch
@@ -314,6 +337,74 @@ class MultiTenantServer:
             self._queue.append([spec, None, step])
         self._queue.sort(key=lambda it: it[2])
 
+    # -------------------------------------------------- fleet feedback --
+    def load(self) -> int:
+        """Router load metric: pages granted out of this replica's pool
+        (decode/prefill grants plus the long-lived KV reservations) plus
+        the prefill chunks still queued — the feedback the fleet's
+        least-loaded admission layer reads back from each replica's
+        control stack every routing round."""
+        used = self.cache.config.num_pages - self.cache.free_pages
+        chunks = sum(ceil_div(t.prompt_len - t.pf_pos, self.prefill_block)
+                     for t in self.tenants
+                     if not t.departed and t.prefilling)
+        return used + chunks
+
+    def active_count(self) -> int:
+        return sum(1 for t in self.tenants if not t.departed)
+
+    def page_utilization(self) -> float:
+        return self.control.utilization
+
+    def admit_routed(self, spec: TenantSpec,
+                     due_wall: Optional[float] = None) -> "Tenant":
+        """Fleet admission: the global router hands a *due* spec
+        straight to this replica, bypassing the local arrival queue —
+        arrival timing is owned by the fleet's clock."""
+        return self._admit_spec(spec, due_wall)
+
+    # ------------------------------------------------------- placement --
+    def _put(self, x: Any) -> Any:
+        """Commit an array pytree to this replica's chip (identity on a
+        plain single-device server).  Committed inputs are what make
+        every one of this server's jit calls execute on its own chip —
+        uncommitted operands (prompt slices, scalar indices) follow."""
+        if self.device is None or x is None:
+            return x
+        return jax.device_put(x, self.device)
+
+    def _put_params(self, params: Any) -> Any:
+        if self.mesh is not None:
+            return jax.device_put(params,
+                                  shard.param_shardings(params, self.mesh))
+        return self._put(params)
+
+    def _put_caches(self, caches: Any) -> Any:
+        if self.mesh is not None:
+            return jax.device_put(
+                caches, shard.cache_shardings(caches, self.mesh, self.batch))
+        return self._put(caches)
+
+    def _put_replicated(self, x: Any) -> Any:
+        """Tokens / encoder outputs on a tensor-parallel replica group:
+        replicated across the group's chips."""
+        if x is None:
+            return None
+        if self.mesh is not None:
+            return jax.device_put(x, NamedSharding(self.mesh, P()))
+        return self._put(x)
+
+    @contextlib.contextmanager
+    def _on_replica(self):
+        """Trace-time context for this replica's dispatches: activates
+        the replica submesh (so model-code shard_hint constraints lower
+        tensor-parallel collectives) when the replica is a TP group."""
+        if self.mesh is None:
+            yield
+        else:
+            with shard.use_mesh(self.mesh):
+                yield
+
     # ------------------------------------------------------- admission --
     def _admit_spec(self, spec: TenantSpec,
                     due_wall: Optional[float] = None) -> Tenant:
@@ -322,11 +413,16 @@ class MultiTenantServer:
         tokens, a prefill-block TenantTask for chunk scheduling, and a
         KV-working-set page reservation held until departure."""
         aid = spec.model if isinstance(spec.model, str) else spec.model.name
-        i = self._n_admitted
+        # a spec-pinned seed overrides the admission counter: the fleet
+        # router stamps the GLOBAL admission index so replaying one
+        # replica's scenario single-device rebuilds the exact same
+        # params/prompt/tid (the bit-identical contract)
+        i = spec.seed if spec.seed is not None else self._n_admitted
         self._n_admitted += 1
         cfg = get_arch(aid).reduced()
-        params = M.init_params(cfg, jax.random.PRNGKey(i))
-        caches = init_caches(params, cfg, self.batch, self.max_len)
+        params = self._put_params(M.init_params(cfg, jax.random.PRNGKey(i)))
+        caches = self._put_caches(
+            init_caches(params, cfg, self.batch, self.max_len))
         if cfg.name not in self._step_fns:
             # plan is static: each (arch, plan) pair compiles once
             # and is cached; the grant decides which kernels run
@@ -337,9 +433,11 @@ class MultiTenantServer:
         tm = TenantModel(_ffn_graph(aid, cfg, seq_block=self.batch),
                          self.mapper)
         self._align_lbm_to_vmem(tm, cfg, max(self.batch, LANE))
-        task = TenantTask(tid, tm, self.cache, self.nec, self.policy)
-        enc = (jnp.zeros((self.batch, cfg.enc_len, cfg.d_model), cfg.jdtype)
-               if cfg.family == "encdec" else None)
+        task = TenantTask(tid, tm, self.cache, self.nec, self.policy,
+                          replica=self.replica)
+        enc = self._put_replicated(
+            jnp.zeros((self.batch, cfg.enc_len, cfg.d_model), cfg.jdtype)
+            if cfg.family == "encdec" else None)
         t = Tenant(tid, cfg, params, caches, self._step_fns[cfg.name], task,
                    token=None, enc=enc)
         t.budget_left = spec.n_inferences
@@ -368,15 +466,15 @@ class MultiTenantServer:
                               self.mapper)
             self._align_lbm_to_vmem(ptm, cfg, max(pf_block, LANE))
             t.ptask = TenantTask(tid + "/pf", ptm, self.cache, self.nec,
-                                 self.policy)
+                                 self.policy, replica=self.replica)
             # best-effort KV reservation: what the pool can spare now
             want = _kv_reserve_pages(cfg, self.batch, spec.prompt_len)
             self.cache.alloc(tid + "#kv",
                              min(want, self.cache.free_pages))
         else:
             # legacy seed-token flow: no prompt, decode from token 0
-            t.token = jnp.full((self.batch, 1), i % cfg.vocab_size,
-                               jnp.int32)
+            t.token = self._put_replicated(
+                jnp.full((self.batch, 1), i % cfg.vocab_size, jnp.int32))
         t.admitted_wall = due_wall if due_wall is not None else time.time()
         self.tenants.append(t)
         self._unstack_bucket(cfg.name)
@@ -631,9 +729,10 @@ class MultiTenantServer:
         t.chunks.append(t.prompt_len)
         kv = self._kv_len(t.prompt_len)
         fn = self._prefill_fn(t.cfg.name)
-        tok, t.caches = fn(t.params, t.caches,
-                           jnp.asarray(t.prompt), jnp.int32(0), t.enc,
-                           kv_len=kv)
+        with self._on_replica():
+            tok, t.caches = fn(t.params, t.caches,
+                               jnp.asarray(t.prompt), jnp.int32(0), t.enc,
+                               kv_len=kv)
         t.pf_pos = t.prompt_len
         self._finish_prefill(t, tok)
         self._stamp_ttft(t, tok)
@@ -823,10 +922,11 @@ class MultiTenantServer:
         _, t, _, chunk = item
         kv = self._kv_len(t.pf_pos + chunk)
         fn = self._prefill_fn(t.cfg.name)
-        tok, t.caches = fn(
-            t.params, t.caches,
-            jnp.asarray(t.prompt[:, t.pf_pos:t.pf_pos + chunk]),
-            jnp.int32(t.pf_pos), t.enc, kv_len=kv)
+        with self._on_replica():
+            tok, t.caches = fn(
+                t.params, t.caches,
+                jnp.asarray(t.prompt[:, t.pf_pos:t.pf_pos + chunk]),
+                jnp.int32(t.pf_pos), t.enc, kv_len=kv)
         t.pf_pos += chunk
         if not t.prefilling:
             self._finish_prefill(t, tok)
@@ -878,8 +978,9 @@ class MultiTenantServer:
                 token_list.append(t.token)
                 index_list.append(jnp.int32(t.index))
                 enc_list.append(t.enc)
-        toks_list, new_caches = fn(params_list, caches_list, token_list,
-                                   index_list, enc_list)
+        with self._on_replica():
+            toks_list, new_caches = fn(params_list, caches_list, token_list,
+                                       index_list, enc_list)
         for item, toks, caches in zip(decode_items, toks_list, new_caches):
             if item[0] == "bucket":
                 _, group, _, k = item
@@ -948,13 +1049,20 @@ class MultiTenantServer:
         return (rate - want) / want
 
     # ------------------------------------------------------------ run --
-    def run(self, steps: int = 16) -> Dict[str, Any]:
-        t0 = time.time()
+    def _begin_run(self, steps: int) -> None:
+        """Per-run reset (start of :meth:`run`; the fleet driver calls
+        it once per replica before interleaving their epochs)."""
+        self._run_t0 = time.time()
         for t in self.tenants:
             t.run_steps = 0
             if t.admitted_wall is None or not t.outputs:
-                t.admitted_wall = t0   # TTFT clock starts with the run
-        tokens_before = sum(t.tokens_served for t in self.tenants)
+                # TTFT clock starts with the run
+                t.admitted_wall = self._run_t0
+        self._run_tokens_before = sum(t.tokens_served for t in self.tenants)
+
+    def run(self, steps: int = 16) -> Dict[str, Any]:
+        self._begin_run(steps)
+        t0 = self._run_t0
         if self.pipeline:
             pending = self._plan_epoch(0.0, steps)
             while pending:
@@ -983,15 +1091,20 @@ class MultiTenantServer:
                 for t in order:
                     self._serve_one_step(t, now)
                 self._clock += 1
-        # hand bucketed caches back to their tenants, then fetch
-        # device values exactly once, after the last epoch
+        return self._finish_run()
+
+    def _finish_run(self) -> Dict[str, Any]:
+        """Close out a run: hand bucketed caches back to their tenants,
+        then fetch device values exactly once, after the last epoch."""
+        t0 = self._run_t0
         for name in list(self._bucket_caches):
             self._unstack_bucket(name)
         live = [t.token for t in self.tenants if t.token is not None]
         if live:
             jax.block_until_ready(live)
         wall = time.time() - t0
-        served = sum(t.tokens_served for t in self.tenants) - tokens_before
+        served = (sum(t.tokens_served for t in self.tenants)
+                  - self._run_tokens_before)
         # p95 over THIS run's admissions only (a warmed server keeps
         # departed tenants from earlier scenario replays around)
         ttfts = [t.ttft for t in self.tenants
@@ -1020,12 +1133,215 @@ class MultiTenantServer:
             "mode": "pipelined" if self.pipeline else "serial",
             "admission": self.admission if self.pipeline else "sequential",
             "epoch_len": self.epoch_len if self.pipeline else 1,
+            "replica": self.replica,
             "wall_s": wall,
             "dram_bytes": self.nec.traffic.dram_total,
+            "tokens_served": served,
+            "page_util": self.page_utilization(),
             "tokens_per_s": served / wall if wall > 0 else 0.0,
             "prefill_tokens": sum(t.pf_pos for t in self.tenants),
             "p95_ttft_s": (float(np.percentile(ttfts, 95)) if ttfts
                            else None),
+        }
+
+
+class FleetServer:
+    """Multi-tenant serving over a JAX device mesh: one epoch-pipelined
+    :class:`MultiTenantServer` per replica chip, each with its own
+    per-chip CaMDN control stack (:class:`ReplicaAllocators` — no page
+    pool, NEC ledger, or allocator profile is shared between chips),
+    plus a global admission layer that routes arrivals to the
+    least-loaded replica.
+
+    * **Topology** comes from :func:`repro.launch.mesh.make_serving_mesh`
+      — an ``(n_replicas, tp)`` mesh over ``('data', 'model')``.  At
+      ``tp=1`` each replica is one chip and tenants are *data-sharded*
+      across chips by placement: every tenant's params/caches/token are
+      ``jax.device_put``-committed to its replica's device, so each
+      replica's fused epoch jit executes on its own chip.  At ``tp>1``
+      a replica is a tensor-parallel group: params/caches are
+      device_put with the ``distributed.sharding`` specs and the model's
+      ``shard_hint`` constraints activate during tracing.
+    * **Routing**: load = pages granted out of the replica's pool (decode
+      grants + KV reservations) + queued prefill chunks, read back from
+      each replica's control stack; ties break on active tenant count,
+      then replica index (identical specs round-robin).  The routed spec
+      gets the GLOBAL admission index pinned as its ``seed``, so tenant
+      identity (params, prompt, tid) is route-independent.
+    * **Lockstep epochs**: every replica plans one epoch per fleet round
+      (its logical clock advances ``epoch_len`` per round, exactly like
+      a single-device run), all replicas' epochs dispatch back-to-back
+      asynchronously, and the one-epoch-ahead host/device overlap now
+      also overlaps host scheduling for replica *r* with device work on
+      every other replica.  Idle gaps fast-forward all clocks together.
+    * **Contract**: per-replica decode token streams are bit-identical
+      to replaying that replica's routed scenario
+      (:meth:`replica_scenarios`) on a fresh single-device server —
+      asserted by tests and the ``fleet`` benchmark entry.
+    """
+
+    def __init__(self, n_replicas: Optional[int] = None, tp: int = 1,
+                 mesh: Any = None, arch_ids: Optional[List[str]] = None,
+                 batch: int = 2, max_len: int = 128,
+                 pages_per_replica: int = VMEM_PAGES, epoch_len: int = 8,
+                 tenants: Optional[List[TenantSpec]] = None,
+                 arrivals: Optional[PoissonArrivals] = None,
+                 prefill_chunk: int = 2 * LANE, steps_per_s: float = 1.0,
+                 qos_targets: Optional[Dict[str, float]] = None):
+        from repro.launch.mesh import make_serving_mesh, replica_submeshes
+        if mesh is None:
+            mesh = make_serving_mesh(n_replicas, tp=tp)
+        self.mesh = mesh
+        self.n_replicas = int(mesh.devices.shape[0])
+        self.tp = int(mesh.devices.shape[1])
+        self.epoch_len = max(1, int(epoch_len))
+        self.steps_per_s = steps_per_s
+        self.registry = ReplicaAllocators(CacheConfig(
+            total_bytes=pages_per_replica * PAGE_BYTES,
+            num_slices=1, num_ways=1, npu_ways=1, page_bytes=PAGE_BYTES))
+        subs = replica_submeshes(mesh)
+        self.replicas = [
+            MultiTenantServer([], batch=batch, max_len=max_len,
+                              epoch_len=self.epoch_len, pipeline=True,
+                              admission="interleaved",
+                              prefill_chunk=prefill_chunk,
+                              steps_per_s=steps_per_s,
+                              qos_targets=dict(qos_targets or {}),
+                              device=subs[r], replica=f"r{r}",
+                              control=self.registry.get(f"r{r}"))
+            for r in range(self.n_replicas)]
+        self._clock = 0               # lockstep with every replica clock
+        self._n_admitted = 0          # global admission index -> seeds
+        self.scenario = FleetScenario(
+            self.n_replicas, [[] for _ in range(self.n_replicas)])
+        self._util_samples: List[List[float]] = [
+            [] for _ in range(self.n_replicas)]
+        self._queue: List[List] = []
+        specs: List[TenantSpec] = [TenantSpec(a) for a in (arch_ids or [])]
+        specs += list(tenants or [])
+        if arrivals is not None:
+            specs += arrivals.specs()
+        specs.sort(key=lambda s: s.arrive_at)
+        now = time.time()
+        for spec in specs:
+            if spec.arrive_at <= 0.0:
+                self._route(spec, now)
+            else:
+                step = int(math.ceil(spec.arrive_at * steps_per_s))
+                self._queue.append([spec, None, step])
+        self._queue.sort(key=lambda it: it[2])
+
+    def enqueue(self, specs: List[TenantSpec]) -> None:
+        """Queue arrivals relative to the CURRENT fleet clock (scenario
+        replays on a warmed fleet, mirroring MultiTenantServer)."""
+        for spec in sorted(specs, key=lambda s: s.arrive_at):
+            step = self._clock + int(math.ceil(spec.arrive_at
+                                               * self.steps_per_s))
+            self._queue.append([spec, None, step])
+        self._queue.sort(key=lambda it: it[2])
+
+    # ---------------------------------------------------------- routing --
+    def _route(self, spec: TenantSpec, due_wall: Optional[float]) -> int:
+        """Admit one due spec on the least-loaded replica."""
+        loads = [(srv.load(), srv.active_count(), r)
+                 for r, srv in enumerate(self.replicas)]
+        _, _, r = min(loads)
+        routed = dataclasses.replace(
+            spec,
+            seed=self._n_admitted if spec.seed is None else spec.seed,
+            arrive_at=self._clock / self.steps_per_s)
+        self._n_admitted += 1
+        t = self.replicas[r].admit_routed(routed, due_wall)
+        self.scenario.per_replica[r].append(routed)
+        self.scenario.routes.append((t.tid, r))
+        return r
+
+    def _route_due(self) -> None:
+        now = time.time()
+        for item in self._queue:
+            if item[1] is None and item[2] <= self._clock:
+                item[1] = now   # TTFT clock: the request exists from here
+        while self._queue and self._queue[0][2] <= self._clock:
+            spec, due_wall, _ = self._queue.pop(0)
+            self._route(spec, due_wall)
+
+    def replica_scenarios(self) -> List[List[TenantSpec]]:
+        """The routed specs per replica (seeds pinned to the global
+        admission index, arrive_at rebased to the admitting clock):
+        replaying list ``r`` on a fresh single-device server reproduces
+        replica ``r``'s decode streams bit-identically."""
+        return [list(s) for s in self.scenario.per_replica]
+
+    # -------------------------------------------------------------- run --
+    def run(self, steps: int = 16) -> Dict[str, Any]:
+        t0 = time.time()
+        for srv in self.replicas:
+            srv._begin_run(steps)
+        self._route_due()
+        pendings = [srv._plan_epoch(0.0, steps) for srv in self.replicas]
+        self._clock += self.epoch_len
+        while any(pendings) or self._queue:
+            # dispatch every replica's epoch back-to-back, all async:
+            # replica r's host scheduling overlaps device work on every
+            # other replica as well as its own (one-epoch-ahead)
+            for srv, p in zip(self.replicas, pendings):
+                if p:
+                    srv._dispatch_epoch(p)
+            for r, srv in enumerate(self.replicas):
+                self._util_samples[r].append(srv.page_utilization())
+            if not any(pendings) and self._queue:
+                nxt = self._queue[0][2]
+                if nxt > self._clock:   # fleet-wide idle gap: fast-forward
+                    self._clock = nxt
+                    for srv in self.replicas:
+                        srv._clock = max(srv._clock, nxt)
+            self._route_due()
+            now = time.time() - t0
+            pendings = [srv._plan_epoch(now, steps) for srv in self.replicas]
+            self._clock += self.epoch_len
+        results = [srv._finish_run() for srv in self.replicas]
+        return self._merge(results, time.time() - t0)
+
+    def _merge(self, results: List[Dict[str, Any]],
+               wall: float) -> Dict[str, Any]:
+        tenants: Dict[str, Any] = {}
+        replicas: List[Dict[str, Any]] = []
+        ttfts: List[float] = []
+        total = 0
+        for r, (srv, res) in enumerate(zip(self.replicas, results)):
+            for tid, info in res["tenants"].items():
+                info = dict(info)
+                info["replica"] = f"r{r}"
+                tenants[tid] = info
+            total += res["tokens_served"]
+            util = self._util_samples[r]
+            replicas.append({
+                "replica": f"r{r}",
+                "tokens_served": res["tokens_served"],
+                "dram_bytes": res["dram_bytes"],
+                "page_util_mean": float(np.mean(util)) if util else 0.0,
+                "tenants": sorted(res["tenants"]),
+            })
+            ttfts += [t.ttft for t in srv.tenants
+                      if t.ttft is not None and t.admitted_wall is not None
+                      and t.admitted_wall >= srv._run_t0]
+        utils = [rep["page_util_mean"] for rep in replicas]
+        balance = min(utils) / max(utils) if utils and max(utils) > 0 else 1.0
+        return {
+            "tenants": tenants,
+            "mode": "fleet",
+            "n_replicas": self.n_replicas,
+            "tp": self.tp,
+            "epoch_len": self.epoch_len,
+            "wall_s": wall,
+            "tokens_served": total,
+            "tokens_per_s": total / wall if wall > 0 else 0.0,
+            "dram_bytes": sum(rep["dram_bytes"] for rep in replicas),
+            "p95_ttft_s": (float(np.percentile(ttfts, 95)) if ttfts
+                           else None),
+            "replicas": replicas,
+            "routes": list(self.scenario.routes),
+            "page_util_balance": balance,
         }
 
 
@@ -1050,6 +1366,9 @@ def main() -> None:
     ap.add_argument("--admission", choices=["interleaved", "sequential"],
                     default="interleaved")
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fleet mode: split the host into N XLA devices "
+                         "and serve over an (N, 1) replica mesh")
     args = ap.parse_args()
     arrivals = None
     if args.arrivals > 0:
@@ -1057,6 +1376,24 @@ def main() -> None:
             rate_per_s=args.arrival_rate, models=args.archs,
             n_arrivals=args.arrivals, n_inferences=args.decode_budget,
             prompt_len=args.prompt_len)
+    if args.devices > 0:
+        from repro.launch.env import set_host_device_count
+        set_host_device_count(args.devices)
+        fleet = FleetServer(n_replicas=args.devices, arch_ids=args.archs,
+                            pages_per_replica=args.pages,
+                            epoch_len=args.epoch_len, max_len=args.max_len,
+                            arrivals=arrivals)
+        out = fleet.run(args.steps)
+        for rep in out["replicas"]:
+            print(f"[fleet] {rep['replica']}: {rep['tokens_served']} tokens, "
+                  f"page util {rep['page_util_mean'] * 100:.0f}%, "
+                  f"tenants {rep['tenants']}")
+        p95 = (f", p95 TTFT {out['p95_ttft_s'] * 1e3:.0f}ms"
+               if out["p95_ttft_s"] is not None else "")
+        print(f"[fleet] {out['n_replicas']} replicas (tp={out['tp']}): "
+              f"{out['tokens_per_s']:.1f} tok/s observed, util balance "
+              f"{out['page_util_balance']:.2f}{p95}")
+        return
     srv = MultiTenantServer(args.archs, total_pages=args.pages,
                             epoch_len=args.epoch_len,
                             pipeline=not args.serial,

@@ -67,6 +67,12 @@ class TenantSpec:
     qos_ms: Optional[float] = None   # per-tenant latency target override
     group_size: int = 1
     prompt_len: int = 0              # serving: prompt tokens to prefill
+    # serving: tenant identity/PRNG seed.  None -> the server stamps its
+    # admission counter.  The fleet router pins the GLOBAL admission
+    # index here when it routes a spec to a replica, so replaying one
+    # replica's scenario on a fresh single-device server reproduces the
+    # exact params/prompt (and tenant id) — the bit-identical contract.
+    seed: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -92,6 +98,21 @@ class PoissonArrivals:
                                   n_inferences=self.n_inferences,
                                   prompt_len=self.prompt_len))
         return out
+
+
+@dataclasses.dataclass
+class FleetScenario:
+    """A fleet run reduced to its routing decisions: per-replica lists of
+    routed TenantSpecs (``seed`` pinned to the global admission index,
+    ``arrive_at`` rebased to the admitting replica's logical clock) plus
+    the route log.  Replaying ``per_replica[r]`` on a fresh single-device
+    :class:`~repro.launch.serve.MultiTenantServer` must reproduce replica
+    ``r``'s decode token streams bit-identically — the fleet's
+    correctness contract, asserted by tests and the fleet benchmark."""
+    n_replicas: int
+    per_replica: List[List[TenantSpec]] = dataclasses.field(
+        default_factory=list)
+    routes: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
