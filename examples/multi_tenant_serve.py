@@ -40,6 +40,11 @@ def _report(out):
             line += (f" | prompt {info['prompt_len']} in chunks "
                      f"{info['prefill_chunks']} | "
                      f"TTFT {info['ttft_s'] * 1e3:.0f}ms")
+            # best-effort KV reservation: flag admissions the pool
+            # could only partially back (kv_reserved < kv_wanted)
+            line += f" | kv {info['kv_reserved']}/{info['kv_wanted']}p"
+            if info["kv_reserved"] < info["kv_wanted"]:
+                line += " (degraded)"
         if info["departed"]:
             line += " | departed (pages reclaimed)"
         print(line)

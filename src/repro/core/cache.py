@@ -12,11 +12,25 @@ Implements the architecture of paper Section III-B(1,3):
   ``pcaddr`` terms; the pcaddr bit layout (byte offset | slice | set |
   way, low to high) stripes consecutive lines across slices so that a
   page draws bandwidth from every slice (Fig. 5b).
+
+Page ownership is *refcounted*: :meth:`SharedCache.alloc` hands out
+exclusive pages, :meth:`SharedCache.share` adds co-holders (copy-on-
+write sharing — shared pages are read-only by convention; divergent
+writes allocate private pages through the normal grant path), and
+:meth:`SharedCache.free` decrements — a page returns to the pool only
+when its LAST holder releases it.  On top of that,
+:class:`PrefixIndex` keys shared KV-prefix page runs by
+(arch, params, token-prefix hash) at prefill-chunk granularity, so
+co-tenants arriving with a common prompt prefix attach to pages some
+earlier tenant already filled instead of prefilling from scratch
+(the serving layer in launch/serve.py drives it).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set
+import hashlib
+import heapq
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.types import ceil_div
 
@@ -78,15 +92,24 @@ class PcAddr:
 class SharedCache:
     """Page-granular state of the NPU subspace of the shared cache.
 
-    Tracks page ownership per tenant and exposes the way mask; line-level
-    data movement/traffic accounting lives in :mod:`repro.core.nec`.
+    Tracks (refcounted) page ownership per tenant and exposes the way
+    mask; line-level data movement/traffic accounting lives in
+    :mod:`repro.core.nec`.
+
+    The free pool is a min-heap, so grants (and re-grants after churn)
+    always prefer contiguous low pcpns — freed pages do not interleave
+    tenants' holdings over time, keeping the pcaddr striping story (and
+    re-grant page identity) deterministic.
     """
 
     def __init__(self, config: CacheConfig):
         self.config = config
-        self._free: List[int] = list(range(config.num_pages))
-        self._owner: Dict[int, str] = {}          # pcpn -> tenant id
+        self._free: List[int] = list(range(config.num_pages))  # min-heap
+        self._holders: Dict[int, Set[str]] = {}   # pcpn -> holder ids
         self._pages_of: Dict[str, Set[int]] = {}  # tenant id -> pcpns
+        # called with the page shortfall when alloc would fail; may free
+        # pages (e.g. PrefixIndex LRU eviction) and the alloc retries
+        self.pressure_hook: Optional[Callable[[int], int]] = None
         # way-mask per slice: bit i set => way i belongs to the NPU subspace
         cpu_ways = config.num_ways - config.npu_ways
         self.way_mask: List[int] = [
@@ -106,26 +129,48 @@ class SharedCache:
         return len(self._pages_of.get(tenant, ()))
 
     def alloc(self, tenant: str, n_pages: int) -> Optional[List[int]]:
-        """Allocate ``n_pages`` to ``tenant``; returns pcpns or None if
-        the pool cannot satisfy the request (caller decides to wait)."""
+        """Allocate ``n_pages`` exclusively to ``tenant`` (refcount 1);
+        returns pcpns (lowest free pcpns first) or None if the pool
+        cannot satisfy the request (caller decides to wait).  When the
+        pool falls short the ``pressure_hook`` (if any) gets one chance
+        to reclaim unreferenced pages before the request fails."""
         if n_pages < 0:
             raise ValueError("negative page count")
+        if n_pages > len(self._free) and self.pressure_hook is not None:
+            self.pressure_hook(n_pages - len(self._free))
         if n_pages > len(self._free):
             return None
         if n_pages == 0:
             return []
-        got = self._free[-n_pages:]
-        del self._free[-n_pages:]
-        owner = self._owner
+        got = [heapq.heappop(self._free) for _ in range(n_pages)]
         for p in got:
-            owner[p] = tenant
+            self._holders[p] = {tenant}
         self._pages_of.setdefault(tenant, set()).update(got)
         return got
 
+    def share(self, pages: List[int], tenant: str) -> List[int]:
+        """Add ``tenant`` as a co-holder of already-allocated ``pages``
+        (copy-on-write sharing: refcount++ per page).  The pages stay
+        out of the pool until EVERY holder — original and shared — has
+        freed them.  Validates the whole request before mutating, and
+        is idempotent per (page, tenant).  Returns the shared pcpns."""
+        to_share = list(dict.fromkeys(pages))
+        bad = [p for p in to_share if p not in self._holders]
+        if bad:
+            raise KeyError(f"cannot share unallocated pages {sorted(bad)}")
+        held = self._pages_of.setdefault(tenant, set())
+        for p in to_share:
+            self._holders[p].add(tenant)
+            held.add(p)
+        return to_share
+
     def free(self, tenant: str, pages: Optional[List[int]] = None) -> int:
-        """Release ``pages`` (or all pages) owned by ``tenant``.
-        Validates the whole (deduplicated) request before mutating any
-        state, so a bad page id leaves the pool untouched."""
+        """Release ``tenant``'s hold on ``pages`` (or all its pages).
+        A page returns to the pool only when its refcount drops to zero
+        — co-holders of a shared page keep it resident.  Validates the
+        whole (deduplicated) request before mutating any state, so a
+        bad page id (including a double-free) leaves the pool
+        untouched.  Returns the number of holds released."""
         owned = self._pages_of.get(tenant, set())
         if pages is None:
             to_free = list(owned)
@@ -136,14 +181,29 @@ class SharedCache:
                 raise KeyError(f"tenant {tenant} does not own pages {sorted(bad)}")
         for p in to_free:
             owned.discard(p)
-            del self._owner[p]
-            self._free.append(p)
+            holders = self._holders[p]
+            holders.discard(tenant)
+            if not holders:
+                del self._holders[p]
+                heapq.heappush(self._free, p)
         if not owned:
             self._pages_of.pop(tenant, None)
         return len(to_free)
 
+    def refcount(self, pcpn: int) -> int:
+        return len(self._holders.get(pcpn, ()))
+
+    def holders_of(self, pcpn: int) -> Set[str]:
+        return set(self._holders.get(pcpn, set()))
+
     def owner_of(self, pcpn: int) -> Optional[str]:
-        return self._owner.get(pcpn)
+        """The EXCLUSIVE owner of a page: its sole holder, or None for
+        free and shared (refcount > 1) pages — exclusively allocated
+        pages keep the legacy single-owner semantics."""
+        holders = self._holders.get(pcpn)
+        if holders is not None and len(holders) == 1:
+            return next(iter(holders))
+        return None
 
     # ---- pcaddr decomposition (Fig. 5b) -----------------------------
     def decompose(self, pcaddr: int) -> PcAddr:
@@ -170,3 +230,232 @@ class SharedCache:
     # ---- introspection ----------------------------------------------
     def snapshot(self) -> Dict[str, int]:
         return {t: len(ps) for t, ps in self._pages_of.items()}
+
+
+# ---------------------------------------------------------------------
+# Prefix-hash KV dedup
+# ---------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One shared KV prefix resident in the page pool.
+
+    ``pages`` are the pcpns this entry holds *beyond its parent* (the
+    delta between the parent's KV reservation and this one), all held
+    by the entry's ``holder`` id via :meth:`SharedCache.share`.  The
+    full page run for a prefix is the union over its parent chain.
+    ``payload`` is opaque to the allocator — the serving layer stores
+    the on-device KV snapshot (and, for a full-prompt entry, the first
+    decode token) there.
+    """
+    key: str                  # hex digest, unique per (arch, params, tokens)
+    arch: str
+    params_key: str
+    kv_len: int               # tokens covered by this prefix
+    parent: Optional[str]     # key of the next-shorter registered prefix
+    pages: List[int]          # delta pages vs parent, held by ``holder``
+    payload: Any
+    tenants: Set[str] = dataclasses.field(default_factory=set)
+    children: int = 0         # registered entries whose parent is this one
+    last_used: int = 0        # LRU clock value of the last hit/attach
+
+    @property
+    def holder(self) -> str:
+        return "pfx#" + self.key[:16]
+
+    @property
+    def refcount(self) -> int:
+        return len(self.tenants)
+
+
+class PrefixIndex:
+    """Maps (arch, params, token-prefix hash) -> resident shared KV pages.
+
+    Entries are registered at prefill-chunk granularity by the tenant
+    that first computes a prefix (the *producer*) and attached to by
+    later arrivals (*consumers*): attach/detach walk the parent chain
+    so refcounts cover every page the consumer reads.  An entry's pages
+    are held in the :class:`SharedCache` under the entry's own holder
+    id, so the producer departing does NOT return them to the pool —
+    they live until the index evicts the entry.  Eviction is LRU over
+    entries with no attached tenants and no registered children, and
+    runs under pool pressure: the index registers itself as the cache's
+    ``pressure_hook``, so an alloc that would fail first reclaims cold
+    prefixes and then retries.
+    """
+
+    def __init__(self, cache: SharedCache):
+        self.cache = cache
+        self.entries: Dict[str, PrefixEntry] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._tick = 0
+        cache.pressure_hook = self.reclaim
+
+    # ---- keys -------------------------------------------------------
+    @staticmethod
+    def prefix_key(arch: str, params_key: str, token_bytes: bytes) -> str:
+        """Stable digest of (architecture, parameter identity, prompt
+        prefix).  ``token_bytes`` is the raw little-endian int32 byte
+        string of the prefix tokens — callers serialize so this module
+        stays free of array dependencies."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(f"{arch}|{params_key}|".encode())
+        h.update(token_bytes)
+        return h.hexdigest()
+
+    # ---- registration (producer side) -------------------------------
+    def register(self, arch: str, params_key: str, token_bytes: bytes,
+                 kv_len: int, pages: List[int], payload: Any,
+                 parent: Optional[str] = None) -> str:
+        """Publish a computed prefix: the entry takes its own refcounted
+        hold on ``pages`` (the delta beyond ``parent``), so they survive
+        the producer's departure.  Idempotent per key — a re-register of
+        a resident prefix only refreshes its LRU stamp."""
+        key = self.prefix_key(arch, params_key, token_bytes)
+        ent = self.entries.get(key)
+        if ent is not None:
+            self._tick += 1
+            ent.last_used = self._tick
+            return key
+        if parent is not None and parent not in self.entries:
+            raise KeyError(f"parent prefix {parent} is not registered")
+        ent = PrefixEntry(key=key, arch=arch, params_key=params_key,
+                          kv_len=kv_len, parent=parent, pages=list(pages),
+                          payload=payload)
+        self.cache.share(ent.pages, ent.holder)
+        if parent is not None:
+            self.entries[parent].children += 1
+        self._tick += 1
+        ent.last_used = self._tick
+        self.entries[key] = ent
+        return key
+
+    # ---- lookup (consumer side) -------------------------------------
+    def lookup(self, arch: str, params_key: str,
+               candidates: List[Tuple[int, bytes]],
+               probe: bool = False) -> Optional[PrefixEntry]:
+        """Longest-match probe: ``candidates`` is (kv_len, token_bytes)
+        pairs tried in order (callers list chunk-grid multiples longest
+        first); returns the first resident entry, or None.  ``probe``
+        skips the hit/miss counters and LRU refresh — the fleet router
+        uses it to rank replicas without perturbing eviction order."""
+        for kv_len, token_bytes in candidates:
+            ent = self.entries.get(self.prefix_key(arch, params_key,
+                                                   token_bytes))
+            if ent is not None:
+                if not probe:
+                    self.hits += 1
+                    self._tick += 1
+                    for e in self.chain(ent):
+                        e.last_used = self._tick
+                return ent
+        if not probe:
+            self.misses += 1
+        return None
+
+    def match_len(self, arch: str, params_key: str,
+                  candidates: List[Tuple[int, bytes]]) -> int:
+        """Longest resident prefix length (0 on miss) — router probe."""
+        ent = self.lookup(arch, params_key, candidates, probe=True)
+        return ent.kv_len if ent is not None else 0
+
+    def touch(self, key: str) -> None:
+        """Refresh an entry's LRU stamp without a lookup."""
+        ent = self.entries.get(key)
+        if ent is not None:
+            self._tick += 1
+            ent.last_used = self._tick
+
+    def chain(self, entry: PrefixEntry) -> List[PrefixEntry]:
+        """``entry`` plus all its ancestors, deepest first."""
+        out = [entry]
+        while out[-1].parent is not None:
+            out.append(self.entries[out[-1].parent])
+        return out
+
+    def chain_pages(self, entry: PrefixEntry) -> List[int]:
+        """All pcpns backing ``entry``'s full prefix (chain union)."""
+        pages: List[int] = []
+        for e in self.chain(entry):
+            pages.extend(e.pages)
+        return pages
+
+    # ---- refcounting -------------------------------------------------
+    def attach(self, key: str, tenant: str) -> PrefixEntry:
+        """Refcount++ on the entry AND every ancestor, so no page the
+        consumer reads can be evicted while it is attached."""
+        ent = self.entries[key]
+        self._tick += 1
+        for e in self.chain(ent):
+            e.tenants.add(tenant)
+            e.last_used = self._tick
+        return ent
+
+    def detach(self, key: str, tenant: str) -> None:
+        """Release ``tenant``'s hold down the chain.  Entries stay
+        resident (warm for the next arrival) until pool pressure or an
+        explicit reclaim evicts them."""
+        ent = self.entries.get(key)
+        if ent is None:
+            return          # evicted while attached? attach prevents it,
+        for e in self.chain(ent):    # but departure must stay total
+            e.tenants.discard(tenant)
+
+    # ---- eviction ----------------------------------------------------
+    def _evictable(self) -> List[PrefixEntry]:
+        return [e for e in self.entries.values()
+                if not e.tenants and e.children == 0]
+
+    def reclaim(self, shortfall: int) -> int:
+        """LRU-evict unreferenced, childless entries until at least
+        ``shortfall`` pages went back to the pool (shared pages only
+        return when their last holder releases, so an entry whose pages
+        a tenant still co-holds frees nothing yet).  Registered as the
+        cache's ``pressure_hook``.  Returns pages actually freed."""
+        freed_before = self.cache.free_pages
+        while self.cache.free_pages - freed_before < shortfall:
+            victims = self._evictable()
+            if not victims:
+                break
+            victim = min(victims, key=lambda e: e.last_used)
+            self.evict(victim.key)
+        return self.cache.free_pages - freed_before
+
+    def evict(self, key: str) -> None:
+        # validate BEFORE popping: a refused eviction must leave the
+        # index intact (children still point at this key)
+        ent = self.entries[key]
+        if ent.tenants:
+            raise RuntimeError(f"evicting prefix {key} with attached "
+                               f"tenants {sorted(ent.tenants)}")
+        if ent.children:
+            raise RuntimeError(f"evicting prefix {key} with {ent.children} "
+                               "registered children")
+        del self.entries[key]
+        if ent.parent is not None and ent.parent in self.entries:
+            self.entries[ent.parent].children -= 1
+        self.cache.free(ent.holder, None)
+        ent.payload = None
+        self.evictions += 1
+
+    def clear(self) -> None:
+        """Drop every unreferenced entry (leaf-first)."""
+        while True:
+            victims = self._evictable()
+            if not victims:
+                return
+            for v in victims:
+                self.evict(v.key)
+
+    # ---- introspection ----------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {
+            "entries": len(self.entries),
+            "pages_held": sum(len(e.pages) for e in self.entries.values()),
+            "attached": sum(len(e.tenants) for e in self.entries.values()),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }

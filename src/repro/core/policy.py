@@ -278,15 +278,19 @@ class ReplicaControl:
     nec: "Nec"
     alloc: DynamicCacheAllocator
     policy: CachePolicy
+    prefix: "PrefixIndex"
 
     @classmethod
     def build(cls, replica: str, cache_config) -> "ReplicaControl":
-        from repro.core.cache import SharedCache
+        from repro.core.cache import PrefixIndex, SharedCache
         from repro.core.nec import Nec
         cache = SharedCache(cache_config)
         nec = Nec(cache)
         alloc = DynamicCacheAllocator(cache)
-        return cls(replica, cache, nec, alloc, CamdnPolicy(alloc))
+        # the index registers itself as the pool's pressure hook, so
+        # grants under pressure first reclaim cold shared prefixes
+        prefix = PrefixIndex(cache)
+        return cls(replica, cache, nec, alloc, CamdnPolicy(alloc), prefix)
 
     # -- feedback the fleet router consumes ----------------------------
     @property

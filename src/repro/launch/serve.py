@@ -115,7 +115,8 @@ from repro.distributed import sharding as shard
 from repro.models import model as M
 from repro.models.base import ArchConfig, get_arch
 from repro.models.ssm import CONV_K
-from repro.models.transformer import init_caches, num_groups
+from repro.models.transformer import (init_caches, num_groups,
+                                      seed_caches_from_prefix)
 from repro.sim.driver import FleetScenario, PoissonArrivals, TenantSpec
 
 
@@ -174,6 +175,48 @@ def _kv_reserve_pages(cfg: ArchConfig, batch: int, tokens: int) -> int:
     return ceil_div(kv + state, PAGE_BYTES) if tokens > 0 else 0
 
 
+# Session-replay prompts draw from fixed-cap PRNG streams and slice:
+# jax.random.randint output depends on the requested shape, so slicing
+# one capped array is what makes turn t+1's prompt EXTEND turn t's
+# bit-exactly (and every session on a system prompt share its prefix).
+_PROMPT_CAP = 4096
+
+
+def _prompt_tokens(spec: TenantSpec, i: int, cfg: ArchConfig,
+                   batch: int) -> np.ndarray:
+    """Deterministic prompt tokens for an admitted spec.
+
+    Legacy specs (``prompt_seed`` unset) keep the exact seed behaviour:
+    one admission-indexed stream shaped by the prompt length.  Session
+    specs compose a shared system-prompt prefix (keyed by
+    ``prefix_seed``) with a per-session suffix (keyed by
+    ``prompt_seed``), both sliced from fixed-cap streams — the content
+    identities cross-tenant KV dedup hashes."""
+    P = spec.prompt_len
+    if spec.prompt_seed is None:
+        return np.asarray(jax.random.randint(
+            jax.random.PRNGKey(7919 + i), (batch, P), 0, cfg.vocab_size),
+            np.int32)
+    pre_len = min(spec.prefix_len, P)
+    assert P <= _PROMPT_CAP, f"prompt_len {P} > cap {_PROMPT_CAP}"
+    pre = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(104729 + spec.prefix_seed),
+        (batch, _PROMPT_CAP), 0, cfg.vocab_size), np.int32)[:, :pre_len]
+    suf = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(7919 + spec.prompt_seed),
+        (batch, _PROMPT_CAP), 0, cfg.vocab_size), np.int32)[:, :P - pre_len]
+    return np.ascontiguousarray(np.concatenate([pre, suf], axis=1))
+
+
+def _prefix_candidates(prompt: np.ndarray, prompt_len: int,
+                       align: int) -> List[Tuple[int, bytes]]:
+    """(kv_len, token_bytes) probe list for the PrefixIndex, longest
+    first: the full prompt, then every chunk-grid multiple below it."""
+    lens = [prompt_len]
+    lens += list(range((prompt_len - 1) // align * align, 0, -align))
+    return [(l, prompt[:, :l].tobytes()) for l in lens]
+
+
 @dataclasses.dataclass
 class Tenant:
     tid: str
@@ -204,6 +247,15 @@ class Tenant:
     admitted_wall: Optional[float] = None
     ttft: Optional[float] = None          # seconds admission -> 1st token
     run_steps: int = 0                    # decode steps this run() call
+    # ---- KV reservation accounting (best-effort degradation) --------
+    kv_wanted: int = 0                    # pages the working set asks for
+    kv_reserved: int = 0                  # pages actually reserved
+    # ---- prefix-hash KV dedup ---------------------------------------
+    pf_computed: int = 0                  # prompt tokens prefilled on-device
+    prefix_hit: int = 0                   # prompt tokens attached from index
+    prefix_key: Optional[str] = None      # attached entry (detach on depart)
+    dedup: Optional[Tuple[str, str]] = None   # (arch, params_key) when
+    #                                           eligible to register/attach
 
     @property
     def prefilling(self) -> bool:
@@ -245,9 +297,11 @@ class MultiTenantServer:
                  prefill_chunk: int = 2 * LANE,
                  steps_per_s: float = 1.0,
                  device: Any = None, replica: str = "",
-                 control: Optional[ReplicaControl] = None):
+                 control: Optional[ReplicaControl] = None,
+                 prefix_dedup: bool = False):
         assert admission in ("interleaved", "sequential"), admission
         self.qos_targets = qos_targets or {}
+        self.prefix_dedup = bool(prefix_dedup)
         self.epoch_len = max(1, int(epoch_len))
         self.pipeline = bool(pipeline)
         self.admission = admission
@@ -281,6 +335,7 @@ class MultiTenantServer:
         self.nec = self.control.nec
         self.alloc = self.control.alloc
         self.policy = self.control.policy
+        self.prefix = self.control.prefix
         total_pages = self.cache.config.num_pages
         self.mapper = _vmem_mapper(total_pages)
         self.tenants: List[Tenant] = []
@@ -302,6 +357,7 @@ class MultiTenantServer:
         self._prefill_cores: Dict[str, Any] = {}
         self._fused_jits: Dict[Tuple, Any] = {}
         self._prefill_jits: Dict[Tuple, Any] = {}
+        self._seed_jits: Dict[str, Any] = {}   # arch -> prefix cache seeder
         # persistent tenant-stacked caches per bucketed arch group: the
         # stacked buffer stays stacked (and donated) across epochs while
         # the bucket holds, instead of an O(cache bytes) restack/slice
@@ -420,9 +476,12 @@ class MultiTenantServer:
         i = spec.seed if spec.seed is not None else self._n_admitted
         self._n_admitted += 1
         cfg = get_arch(aid).reduced()
-        params = self._put_params(M.init_params(cfg, jax.random.PRNGKey(i)))
-        caches = self._put_caches(
-            init_caches(params, cfg, self.batch, self.max_len))
+        # a spec-pinned param_seed decouples MODEL identity from tenant
+        # identity: every session on one system prompt shares a params
+        # instance — the precondition for cross-tenant KV dedup
+        pkey = spec.param_seed if spec.param_seed is not None else i
+        params = self._put_params(
+            M.init_params(cfg, jax.random.PRNGKey(pkey)))
         if cfg.name not in self._step_fns:
             # plan is static: each (arch, plan) pair compiles once
             # and is cached; the grant decides which kernels run
@@ -438,11 +497,12 @@ class MultiTenantServer:
         enc = self._put_replicated(
             jnp.zeros((self.batch, cfg.enc_len, cfg.d_model), cfg.jdtype)
             if cfg.family == "encdec" else None)
-        t = Tenant(tid, cfg, params, caches, self._step_fns[cfg.name], task,
+        t = Tenant(tid, cfg, params, None, self._step_fns[cfg.name], task,
                    token=None, enc=enc)
         t.budget_left = spec.n_inferences
         if spec.qos_ms is not None:
             self.qos_targets[tid] = spec.qos_ms * 1e-3
+        hit = None
         if spec.prompt_len > 0:
             # the KV cache must hold the prompt plus every budgeted
             # decode step: dynamic_update_slice CLAMPS out-of-range
@@ -453,10 +513,7 @@ class MultiTenantServer:
                 (f"{tid}: prompt {spec.prompt_len} + decode budget "
                  f"{spec.n_inferences or 0} > max_len {self.max_len}")
             t.prompt_len = spec.prompt_len
-            t.prompt = np.asarray(jax.random.randint(
-                jax.random.PRNGKey(7919 + i),
-                (self.batch, spec.prompt_len), 0, cfg.vocab_size),
-                np.int32)
+            t.prompt = _prompt_tokens(spec, i, cfg, self.batch)
             # whole-prompt MCT for the sequential baseline, chunk-block
             # MCT for interleaved chunked prefill
             pf_block = (spec.prompt_len
@@ -467,14 +524,44 @@ class MultiTenantServer:
             self._align_lbm_to_vmem(ptm, cfg, max(pf_block, LANE))
             t.ptask = TenantTask(tid + "/pf", ptm, self.cache, self.nec,
                                  self.policy, replica=self.replica)
-            # best-effort KV reservation: what the pool can spare now
             want = _kv_reserve_pages(cfg, self.batch, spec.prompt_len)
-            self.cache.alloc(tid + "#kv",
-                             min(want, self.cache.free_pages))
+            t.kv_wanted = want
+            shared: List[int] = []
+            if self._dedup_eligible(spec, cfg):
+                t.dedup = (cfg.name, f"ps{spec.param_seed}")
+                hit = self._prefix_lookup(t)
+            if hit is not None:
+                # attach BEFORE allocating the private remainder: the
+                # refcount protects the matched chain from the very
+                # pool pressure that allocation can trigger
+                t.prefix_key = hit.key
+                t.prefix_hit = hit.kv_len
+                self.prefix.attach(hit.key, tid)
+                shared = self.cache.share(self.prefix.chain_pages(hit),
+                                          tid + "#kv")
+                # one dynamic-update-slice copy of the shared prefix
+                # into fresh zero caches: bit-identical to the state a
+                # cold tenant reaches after prefilling the same tokens
+                t.caches = self._put_caches(self._seed_fn(cfg)(
+                    hit.payload["snap"], prefix_len=hit.kv_len))
+                t.pf_pos = hit.kv_len
+            # best-effort KV reservation (for the un-shared remainder):
+            # the pool's pressure hook may reclaim cold prefixes to
+            # meet it in full, else degrade to what the pool can spare
+            # now — kv_reserved < kv_wanted records the degradation
+            priv = max(0, want - len(shared))
+            got = self.cache.alloc(tid + "#kv", priv)
+            if got is None:
+                got = self.cache.alloc(tid + "#kv",
+                                       min(priv, self.cache.free_pages))
+            t.kv_reserved = len(shared) + len(got or [])
         else:
             # legacy seed-token flow: no prompt, decode from token 0
             t.token = self._put_replicated(
                 jnp.full((self.batch, 1), i % cfg.vocab_size, jnp.int32))
+        if t.caches is None:
+            t.caches = self._put_caches(
+                init_caches(params, cfg, self.batch, self.max_len))
         t.admitted_wall = due_wall if due_wall is not None else time.time()
         self.tenants.append(t)
         self._unstack_bucket(cfg.name)
@@ -482,7 +569,62 @@ class MultiTenantServer:
         self._epoch_cores.setdefault(cfg.name, M.make_decode_epoch(cfg))
         self._prefill_cores.setdefault(cfg.name, M.make_prefill_chunk(cfg))
         self._batched.pop(cfg.name, None)   # group changed: stack stale
+        if hit is not None and t.pf_pos >= t.prompt_len:
+            # full hit: the whole prompt is resident and the entry
+            # stored the producer's first decode token — prefill is
+            # skipped entirely and TTFT collapses to the seeding copy
+            tok = hit.payload["token"]
+            self._finish_prefill(t, tok)
+            self._stamp_ttft(t, tok)
         return t
+
+    def _dedup_eligible(self, spec: TenantSpec, cfg: ArchConfig) -> bool:
+        """Cross-tenant KV dedup preconditions: the server opted in, a
+        session spec with decoupled param/prompt identities (content
+        that can actually recur across tenants), a prompt to dedup, an
+        arch whose prompt prefix determines its cache prefix (encdec
+        caches are encoder-derived, not prompt-derived), and the
+        interleaved pipelined path (chunked prefill is what can resume
+        mid-prompt)."""
+        return (self.prefix_dedup and self.pipeline
+                and self.admission == "interleaved"
+                and spec.param_seed is not None
+                and spec.prompt_seed is not None
+                and spec.prompt_len > 0 and cfg.family != "encdec")
+
+    def _prefix_lookup(self, t: Tenant):
+        """Longest USABLE resident prefix for an arriving prompt.  A
+        partial hit must sit on the tenant's chunk-alignment grid (the
+        chunked == one-shot bitwise contract only covers aligned
+        boundaries), and a full hit must carry the stored first decode
+        token; anything else walks up the parent chain."""
+        arch, params_key = t.dedup
+        align = self._chunk_align(t.cfg)
+        cands = _prefix_candidates(t.prompt, t.prompt_len, align)
+        ent = self.prefix.lookup(arch, params_key, cands)
+        while ent is not None:
+            if ent.kv_len == t.prompt_len:
+                if ent.payload.get("token") is not None:
+                    return ent
+            elif ent.kv_len % align == 0:
+                return ent
+            ent = (self.prefix.entries.get(ent.parent)
+                   if ent.parent is not None else None)
+        return None
+
+    def _seed_fn(self, cfg: ArchConfig):
+        """Jitted prefix-seeding program, one per arch (jit keys the
+        static prefix_len variants).  The snapshot argument is NOT
+        donated: the resident entry keeps serving later arrivals."""
+        fn = self._seed_jits.get(cfg.name)
+        if fn is None:
+            def seed(snap, prefix_len):
+                return seed_caches_from_prefix(cfg, self.batch,
+                                               self.max_len, snap,
+                                               prefix_len)
+            fn = jax.jit(seed, static_argnames=("prefix_len",))
+            self._seed_jits[cfg.name] = fn
+        return fn
 
     def _batched_params(self, name: str):
         """Tenant-stacked params for a bucketed arch group, built
@@ -541,6 +683,11 @@ class MultiTenantServer:
         t.task.depart()
         if t.ptask is not None:
             t.ptask.depart()
+        if t.prefix_key is not None:
+            # refcount-- down the attached chain; the entries (and any
+            # page the PRODUCER contributed) stay resident for the next
+            # warm arrival until pool pressure evicts them
+            self.prefix.detach(t.prefix_key, t.tid)
         self.cache.free(t.tid + "#kv", None)
         self._unstack_bucket(t.cfg.name)
         self._groups[t.cfg.name].remove(t)
@@ -712,6 +859,50 @@ class MultiTenantServer:
         t.tokens_served += self.batch
         t.index = t.prompt_len
         t.ptask.depart()
+        if t.dedup is not None:
+            self._register_prefix(t, token)
+
+    def _register_prefix(self, t: Tenant, token: Any) -> None:
+        """Producer side of the dedup: publish the finished prompt's KV
+        as a chain of PrefixIndex entries at chunk-grid granularity.
+
+        Causal attention never rewrites earlier KV rows, so ONE copied
+        snapshot of the final caches is a valid payload for every
+        interior boundary (the seeder slices rows ``[0, p)``); SSM /
+        hybrid recurrent state is cumulative — only the exact
+        full-length entry is registered for them.  Each entry holds the
+        slice of the tenant's KV reservation its length-delta accounts
+        for, so the modeled pages survive the producer's departure.
+        The full-length entry also stores the first decode token, which
+        is what lets an identical re-arrival skip prefill outright."""
+        arch, params_key = t.dedup
+        full_key = self.prefix.prefix_key(arch, params_key,
+                                          t.prompt.tobytes())
+        if full_key in self.prefix.entries:
+            # identical prompt already published (e.g. this tenant was
+            # itself a full hit): refresh its LRU stamp, no new copy
+            self.prefix.touch(full_key)
+            return
+        # explicit device copy: the live caches are donated to the next
+        # decode epoch, the snapshot must outlive the tenant
+        snap = jax.tree_util.tree_map(jnp.copy, t.caches)
+        align = self._chunk_align(t.cfg)
+        if t.cfg.family in ("dense", "moe"):
+            bounds = list(range(align, t.prompt_len, align))
+            bounds.append(t.prompt_len)
+        else:
+            bounds = [t.prompt_len]
+        resv = sorted(self.cache.pages_of(t.tid + "#kv"))
+        parent, prev_pages = None, 0
+        for p in bounds:
+            budget = min(_kv_reserve_pages(t.cfg, self.batch, p),
+                         len(resv))
+            payload = {"snap": snap,
+                       "token": token if p == t.prompt_len else None}
+            parent = self.prefix.register(
+                arch, params_key, t.prompt[:, :p].tobytes(), p,
+                resv[prev_pages:budget], payload, parent=parent)
+            prev_pages = max(prev_pages, budget)
 
     def _stamp_ttft(self, t: Tenant, token: Any) -> None:
         jax.block_until_ready(token)
@@ -733,6 +924,7 @@ class MultiTenantServer:
             tok, t.caches = fn(t.params, t.caches,
                                jnp.asarray(t.prompt), jnp.int32(0), t.enc,
                                kv_len=kv)
+        t.pf_computed += t.prompt_len
         t.pf_pos = t.prompt_len
         self._finish_prefill(t, tok)
         self._stamp_ttft(t, tok)
@@ -928,6 +1120,7 @@ class MultiTenantServer:
                 jnp.asarray(t.prompt[:, t.pf_pos:t.pf_pos + chunk]),
                 jnp.int32(t.pf_pos), t.enc, kv_len=kv)
         t.pf_pos += chunk
+        t.pf_computed += chunk
         if not t.prefilling:
             self._finish_prefill(t, tok)
             return (t, tok)
@@ -1122,6 +1315,10 @@ class MultiTenantServer:
                         "prefill_chunks": list(t.chunks),
                         "ttft_s": t.ttft,
                         "departed": t.departed,
+                        "kv_wanted": t.kv_wanted,
+                        "kv_reserved": t.kv_reserved,
+                        "prefix_hit": t.prefix_hit,
+                        "prefill_computed": t.pf_computed,
                         # full decoded history [B, total_steps], fetched
                         # here (the loop itself never pulled a value)
                         "output": (np.concatenate(
@@ -1140,6 +1337,10 @@ class MultiTenantServer:
             "page_util": self.page_utilization(),
             "tokens_per_s": served / wall if wall > 0 else 0.0,
             "prefill_tokens": sum(t.pf_pos for t in self.tenants),
+            # tokens actually prefilled ON DEVICE: the gap to
+            # prefill_tokens is what prefix-hash dedup saved
+            "prefill_computed": sum(t.pf_computed for t in self.tenants),
+            "prefix": self.prefix.stats(),
             "p95_ttft_s": (float(np.percentile(ttfts, 95)) if ttfts
                            else None),
         }
@@ -1187,7 +1388,8 @@ class FleetServer:
                  tenants: Optional[List[TenantSpec]] = None,
                  arrivals: Optional[PoissonArrivals] = None,
                  prefill_chunk: int = 2 * LANE, steps_per_s: float = 1.0,
-                 qos_targets: Optional[Dict[str, float]] = None):
+                 qos_targets: Optional[Dict[str, float]] = None,
+                 prefix_dedup: bool = False):
         from repro.launch.mesh import make_serving_mesh, replica_submeshes
         if mesh is None:
             mesh = make_serving_mesh(n_replicas, tp=tp)
@@ -1196,6 +1398,7 @@ class FleetServer:
         self.tp = int(mesh.devices.shape[1])
         self.epoch_len = max(1, int(epoch_len))
         self.steps_per_s = steps_per_s
+        self.prefix_dedup = bool(prefix_dedup)
         self.registry = ReplicaAllocators(CacheConfig(
             total_bytes=pages_per_replica * PAGE_BYTES,
             num_slices=1, num_ways=1, npu_ways=1, page_bytes=PAGE_BYTES))
@@ -1208,7 +1411,8 @@ class FleetServer:
                               steps_per_s=steps_per_s,
                               qos_targets=dict(qos_targets or {}),
                               device=subs[r], replica=f"r{r}",
-                              control=self.registry.get(f"r{r}"))
+                              control=self.registry.get(f"r{r}"),
+                              prefix_dedup=prefix_dedup)
             for r in range(self.n_replicas)]
         self._clock = 0               # lockstep with every replica clock
         self._n_admitted = 0          # global admission index -> seeds
@@ -1241,11 +1445,38 @@ class FleetServer:
         self._queue.sort(key=lambda it: it[2])
 
     # ---------------------------------------------------------- routing --
+    def _match_lens(self, spec: TenantSpec) -> List[int]:
+        """Prefix-affinity probe: the longest resident prefix each
+        replica's per-chip PrefixIndex holds for this spec's prompt
+        (0 everywhere when the spec isn't dedup-eligible).  Probes are
+        side-effect-free — no hit/miss counters, no LRU perturbation."""
+        none = [0] * self.n_replicas
+        srv0 = self.replicas[0]
+        if not (self.prefix_dedup and spec.param_seed is not None
+                and spec.prompt_seed is not None and spec.prompt_len > 0):
+            return none
+        aid = spec.model if isinstance(spec.model, str) else spec.model.name
+        cfg = get_arch(aid).reduced()
+        if cfg.family == "encdec":
+            return none
+        # session prompts are admission-index-independent (prefix_seed /
+        # prompt_seed streams), so the probe prompt IS the real prompt
+        prompt = _prompt_tokens(spec, 0, cfg, srv0.batch)
+        cands = _prefix_candidates(prompt, spec.prompt_len,
+                                   srv0._chunk_align(cfg))
+        return [srv.control.prefix.match_len(
+                    cfg.name, f"ps{spec.param_seed}", cands)
+                for srv in self.replicas]
+
     def _route(self, spec: TenantSpec, due_wall: Optional[float]) -> int:
-        """Admit one due spec on the least-loaded replica."""
-        loads = [(srv.load(), srv.active_count(), r)
+        """Admit one due spec: prefer the replica already holding the
+        longest matching prompt prefix (warm KV beats raw headroom —
+        attaching is one on-device copy vs recomputing the prefix),
+        tie-broken least-loaded, then fewest active tenants."""
+        match = self._match_lens(spec)
+        loads = [(-match[r], srv.load(), srv.active_count(), r)
                  for r, srv in enumerate(self.replicas)]
-        _, _, r = min(loads)
+        _, _, _, r = min(loads)
         routed = dataclasses.replace(
             spec,
             seed=self._n_admitted if spec.seed is None else spec.seed,
@@ -1405,9 +1636,14 @@ def main() -> None:
         ttft = (f", TTFT {info['ttft_s'] * 1e3:.0f}ms "
                 f"(chunks {info['prefill_chunks']})"
                 if info["ttft_s"] is not None else "")
+        kv = ""
+        if info["kv_wanted"]:
+            kv = f", kv {info['kv_reserved']}/{info['kv_wanted']}p"
+            if info["kv_reserved"] < info["kv_wanted"]:
+                kv += " (degraded)"
         print(f"[serve] {tid}: {info['tokens']} tokens, "
               f"LBM {info['lbm_frac'] * 100:.0f}%, recent {info['choices']}, "
-              f"plans {info['plans']}{ttft}")
+              f"plans {info['plans']}{ttft}{kv}")
     p95 = (f", p95 TTFT {out['p95_ttft_s'] * 1e3:.0f}ms"
            if out["p95_ttft_s"] is not None else "")
     print(f"[serve] {out['mode']}/{out['admission']} "

@@ -290,6 +290,54 @@ def init_caches(params: Params, cfg: ArchConfig, batch: int, max_len: int):
     return jax.vmap(one)(jnp.arange(G))
 
 
+def seed_caches_from_prefix(cfg: ArchConfig, batch: int, max_len: int,
+                            snapshot, prefix_len: int):
+    """Fresh decode caches pre-seeded with a shared KV prefix.
+
+    ``snapshot`` is a cache pytree some co-tenant already filled through
+    at least ``prefix_len`` tokens (same cfg/batch/max_len geometry).
+    Returns ``init_caches``-fresh buffers with exactly rows
+    ``[0, prefix_len)`` of the snapshot's KV copied in — one
+    dynamic-update-slice per KV buffer — and everything past the prefix
+    zero, so the result is bit-identical to the cache state a cold
+    tenant would have after prefilling the same ``prefix_len`` tokens
+    itself (causal attention never rewrites earlier KV rows).
+
+    SSM state is cumulative rather than row-addressed, so for ssm /
+    hybrid families the snapshot is only valid at its exact length:
+    callers must pass ``prefix_len`` equal to the snapshot's token count
+    and the recurrent state is adopted wholesale (hybrid still slices
+    its attention KV).  ``prefix_len`` must be a Python int (static
+    under jit).  encdec is unsupported — cross-attention caches are
+    encoder-derived, not prompt-prefix-derived.
+    """
+    fresh = init_caches(None, cfg, batch, max_len)
+
+    def kv_seed(dst, src):
+        # KV leaves are [..., time, kv_heads, head_dim]: time is axis -3
+        # for both per-group 4D buffers and stacked 5D buffers
+        pre = jax.lax.slice_in_dim(src, 0, prefix_len, axis=src.ndim - 3)
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, pre.astype(dst.dtype), 0, axis=dst.ndim - 3)
+
+    def adopt(dst, src):
+        return src.astype(dst.dtype)
+
+    tree_map = jax.tree_util.tree_map
+    if cfg.family in ("dense", "moe"):
+        return tree_map(kv_seed, fresh, snapshot)
+    if cfg.family == "ssm":
+        return tree_map(adopt, fresh, snapshot)
+    if cfg.family == "hybrid":
+        def one(f, s):
+            return {"ssm": tree_map(adopt, f["ssm"], s["ssm"]),
+                    "attn": tree_map(kv_seed, f["attn"], s["attn"])}
+        if isinstance(fresh, tuple):
+            return tuple(one(f, s) for f, s in zip(fresh, snapshot))
+        return one(fresh, snapshot)   # stacked leaves: same dict shape
+    raise ValueError(f"prefix seeding unsupported for family {cfg.family}")
+
+
 def decode_epoch(params: Params, token: jnp.ndarray, caches,
                  index: jnp.ndarray, cfg: ArchConfig, k: int, *,
                  next_token_fn,

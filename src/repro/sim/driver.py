@@ -73,6 +73,20 @@ class TenantSpec:
     # replica's scenario on a fresh single-device server reproduces the
     # exact params/prompt (and tenant id) — the bit-identical contract.
     seed: Optional[int] = None
+    # serving, session replay: decoupled content identities.  When
+    # ``param_seed`` is set, the tenant's parameters come from
+    # PRNGKey(param_seed) rather than the admission seed, so several
+    # arrivals can SHARE a model instance — the precondition for
+    # cross-tenant KV dedup, which the server only attempts when this
+    # field is set.  ``prefix_len`` tokens of the prompt are drawn from
+    # the shared PRNGKey(104729 + prefix_seed) stream (the "system
+    # prompt"), the remainder from PRNGKey(7919 + prompt_seed); both are
+    # sliced from fixed-cap streams so a longer prompt with the same
+    # seeds *extends* a shorter one bit-exactly (multi-turn re-arrivals).
+    param_seed: Optional[int] = None
+    prompt_seed: Optional[int] = None
+    prefix_len: int = 0
+    prefix_seed: int = 0
 
 
 @dataclasses.dataclass
@@ -97,6 +111,53 @@ class PoissonArrivals:
             out.append(TenantSpec(rng.choice(self.models), arrive_at=t,
                                   n_inferences=self.n_inferences,
                                   prompt_len=self.prompt_len))
+        return out
+
+
+@dataclasses.dataclass
+class SessionArrivals:
+    """Session-replay workload: ``n_sessions`` chat sessions share
+    ``n_prompts`` system prompts (session s uses prompt ``s % n_prompts``
+    as its first ``prefix_len`` tokens) and re-arrive for ``turns``
+    turns.  Turn t's prompt is the *whole* turn-(t-1) prompt extended by
+    ``turn_tokens`` fresh tokens — exactly the traffic shape prefix-hash
+    KV dedup targets: the first arrival per system prompt prefills it
+    cold, every later arrival (same prompt, or a later turn of any
+    session on it) attaches to resident pages and prefills only its
+    private suffix.  All sessions of one system prompt share
+    ``param_seed`` (same model instance — dedup's precondition)."""
+    models: List[str]
+    n_sessions: int = 4
+    turns: int = 2
+    n_prompts: int = 2
+    prefix_len: int = 256
+    turn_tokens: int = 128
+    gap_s: float = 2.0               # inter-arrival gap
+    n_inferences: Optional[int] = 8
+    param_seed: int = 11
+    seed: int = 0
+
+    def specs(self) -> List[TenantSpec]:
+        rng = random.Random(self.seed)
+        out: List[TenantSpec] = []
+        t = 0.0
+        # arrivals interleave turns round-robin so warm re-arrivals land
+        # while earlier sessions' prefixes are still resident
+        for turn in range(self.turns):
+            for s in range(self.n_sessions):
+                prompt_id = s % self.n_prompts
+                t += self.gap_s * (0.5 + rng.random())
+                out.append(TenantSpec(
+                    # arch follows the system prompt: dedup needs every
+                    # session on one prompt to share arch AND params
+                    self.models[prompt_id % len(self.models)],
+                    arrive_at=t,
+                    n_inferences=self.n_inferences,
+                    prompt_len=self.prefix_len + (turn + 1) * self.turn_tokens,
+                    param_seed=self.param_seed + prompt_id,
+                    prompt_seed=1000 * self.seed + s,
+                    prefix_len=self.prefix_len,
+                    prefix_seed=prompt_id))
         return out
 
 

@@ -18,7 +18,7 @@ Classifies every byte the benchmark DNNs move through the shared cache:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.types import LayerKind, ModelGraph
 
@@ -90,3 +90,94 @@ def aggregate_reuse_stats(graphs: List[ModelGraph], co_runners: int = 1
         for k, v in s.distance_bytes.items():
             dists[k] += v
     return ReuseStats(counts, dists)
+
+
+# ---------------------------------------------------------------------
+# Cross-tenant shared-prefix reuse (the Fig. 3 analysis extended to the
+# serving workload prefix-hash KV dedup targets).
+# ---------------------------------------------------------------------
+def _arch_of(spec) -> str:
+    return spec.model if isinstance(spec.model, str) else spec.model.name
+
+
+def _prefix_identity(spec, l: int) -> Tuple:
+    """Pure-python content identity of a spec's first ``l`` prompt
+    tokens, mirroring the serving side's fixed-cap stream composition
+    (launch/serve.py ``_prompt_tokens``): positions below ``prefix_len``
+    come from the shared prefix stream, the rest from the per-session
+    suffix stream — two specs produce bit-identical length-``l``
+    prefixes iff these tuples are equal."""
+    pre = min(l, spec.prefix_len)
+    # a zero-length stream contributes no tokens, so its seed must not
+    # split the identity (the serving side hashes the actual bytes)
+    return (spec.param_seed,
+            ("pre", spec.prefix_seed if pre else None, pre),
+            ("suf", spec.prompt_seed if l > pre else None, l - pre))
+
+
+def shared_prefix_reuse(specs: List[Any], align: int = 128,
+                        bytes_per_token: Optional[Dict[str, int]] = None
+                        ) -> Dict[str, Any]:
+    """How much of a session-replay workload's prefill traffic is
+    re-reads of prompt prefixes some earlier tenant already produced —
+    the headroom prefix-hash KV dedup claims, computed analytically so
+    the BENCH numbers have an independent cross-check.
+
+    Per aligned prefix length ``l``: how many tenants' prompts reach
+    ``l`` and how many of those are duplicates of a co-tenant's prefix
+    (``dup_tokens = duplicates * l``, ``dup_bytes`` when a per-arch
+    ``bytes_per_token`` map is given).  The ``dedup_tokens`` total
+    replays arrivals in order and credits each with its longest prefix
+    (grid-aligned, or the exact full prompt) already seen — exactly the
+    longest-match rule the serving admission applies, so
+    ``dedup_frac`` predicts the benchmark's prefill-token savings."""
+    bpt = bytes_per_token or {}
+    eligible = [s for s in specs
+                if s.param_seed is not None and s.prompt_seed is not None
+                and s.prompt_len > 0]
+    per_len: List[Dict[str, Any]] = []
+    max_len = max((s.prompt_len for s in eligible), default=0)
+    for l in range(align, max_len + 1, align):
+        groups: Dict[Tuple, int] = {}
+        for s in eligible:
+            if s.prompt_len >= l:
+                key = (_arch_of(s),) + _prefix_identity(s, l)
+                groups[key] = groups.get(key, 0) + 1
+        dup = sum(n - 1 for n in groups.values())
+        per_len.append({
+            "prefix_len": l,
+            "tenants": sum(groups.values()),
+            "dup_tenants": dup,
+            "dup_tokens": dup * l,
+            "dup_bytes": sum((n - 1) * l * bpt.get(k[0], 0)
+                             for k, n in groups.items()),
+        })
+
+    def probe_lens(s) -> List[int]:
+        return ([s.prompt_len]
+                + list(range((s.prompt_len - 1) // align * align, 0,
+                             -align)))
+
+    seen: set = set()
+    saved = total = saved_bytes = 0
+    for s in sorted(specs, key=lambda s: s.arrive_at):
+        if s.prompt_len <= 0:
+            continue
+        total += s.prompt_len
+        if s.param_seed is None or s.prompt_seed is None:
+            continue
+        for l in probe_lens(s):
+            if (_arch_of(s),) + _prefix_identity(s, l) in seen:
+                saved += l
+                saved_bytes += l * bpt.get(_arch_of(s), 0)
+                break
+        for l in probe_lens(s):
+            seen.add((_arch_of(s),) + _prefix_identity(s, l))
+    return {
+        "align": align,
+        "per_prefix_len": per_len,
+        "prompt_tokens": total,
+        "dedup_tokens": saved,
+        "dedup_bytes": saved_bytes,
+        "dedup_frac": saved / total if total else 0.0,
+    }

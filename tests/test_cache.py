@@ -1,7 +1,31 @@
-"""Unit + property tests: shared cache, CPT, NEC (paper III-B)."""
+"""Unit + property tests: shared cache, CPT, NEC (paper III-B).
+
+The hypothesis-driven property tests skip individually when hypothesis
+is unavailable; everything else runs regardless (a module-level
+importorskip used to silently skip the whole file)."""
+import random
+
 import pytest
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # image without hypothesis:
+    HAVE_HYPOTHESIS = False                # inert decorator stand-ins so
+                                           # the module still imports; the
+    def given(*a, **kw):                   # skipif mark gates the tests
+        return lambda f: f
+
+    settings = given
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _St()
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
 
 from repro.core.cache import CacheConfig, SharedCache
 from repro.core.cpt import CachePageTable, CptFault
@@ -58,6 +82,7 @@ def test_cannot_free_unowned():
         cache.free("b", a)
 
 
+@needs_hypothesis
 @settings(max_examples=200, deadline=None)
 @given(st.lists(st.tuples(st.sampled_from(["t0", "t1", "t2", "t3"]),
                           st.integers(0, 100)), max_size=40))
@@ -82,6 +107,116 @@ def test_page_exclusivity_property(ops):
     assert cache.free_pages == total
 
 
+# ------------------------------------------- refcounted sharing (CoW) --
+def test_share_refcount_lifecycle():
+    """Shared pages stay resident until the LAST holder frees them."""
+    cache = make_cache()
+    total = cache.config.num_pages
+    a = cache.alloc("a", 4)
+    shared = cache.share(a, "b")
+    assert shared == a
+    assert all(cache.refcount(p) == 2 for p in a)
+    assert all(cache.holders_of(p) == {"a", "b"} for p in a)
+    # shared pages have no exclusive owner
+    assert all(cache.owner_of(p) is None for p in a)
+    cache.share(a, "b")                             # idempotent
+    assert all(cache.refcount(p) == 2 for p in a)
+    cache.free("a")
+    assert cache.free_pages == total - 4            # b keeps them resident
+    assert all(cache.owner_of(p) == "b" for p in a)  # sole holder again
+    cache.free("b")
+    assert cache.free_pages == total
+
+
+def test_share_unallocated_raises():
+    cache = make_cache()
+    a = cache.alloc("a", 2)
+    with pytest.raises(KeyError):
+        cache.share(a + [383], "b")                 # 383 is free
+    assert cache.allocated_pages("b") == 0          # nothing half-shared
+
+
+def test_shared_page_double_free_raises():
+    """Double-free of a shared page: the second release is a KeyError
+    and leaves the surviving holder's refcount untouched."""
+    cache = make_cache()
+    a = cache.alloc("a", 2)
+    cache.share(a, "b")
+    cache.free("b", a)
+    with pytest.raises(KeyError):
+        cache.free("b", a)
+    assert all(cache.refcount(p) == 1 for p in a)
+    assert all(cache.owner_of(p) == "a" for p in a)
+
+
+def test_free_order_heap_determinism():
+    """Freed pages re-enter the pool as a min-heap: whatever order the
+    churn released them in, the next grant takes the lowest free pcpns
+    — re-grant page identity is deterministic."""
+    cache = make_cache()
+    a = cache.alloc("a", 8)                         # pcpns 0..7
+    b = cache.alloc("b", 8)                         # pcpns 8..15
+    cache.free("a", [a[5], a[1], a[3]])             # scrambled order
+    cache.free("b", [b[7], b[0]])
+    assert cache.alloc("c", 4) == [1, 3, 5, 8]      # lowest-first
+    assert cache.alloc("c", 1) == [15]
+
+
+def _run_refcount_ops(cache, ops):
+    """Execute (op, tenant, n) sequences against a python mirror: the
+    cache's refcounts and holder sets always match the model, and free
+    pages + held pages is conserved."""
+    total = cache.config.num_pages
+    model = {}                                      # pcpn -> holder set
+    for op, tenant, n in ops:
+        if op == "alloc":
+            got = cache.alloc(tenant, n)
+            if got is not None:
+                for p in got:
+                    model[p] = {tenant}
+        elif op == "share":
+            pages = sorted(model)[:n]
+            if pages:
+                cache.share(pages, tenant)
+                for p in pages:
+                    model[p].add(tenant)
+        else:
+            held = sorted(p for p, hs in model.items() if tenant in hs)[:n]
+            if held:
+                cache.free(tenant, held)
+                for p in held:
+                    model[p].discard(tenant)
+                    if not model[p]:
+                        del model[p]
+        assert cache.free_pages == total - len(model)
+        for p, hs in model.items():
+            assert cache.holders_of(p) == hs
+            assert cache.refcount(p) == len(hs)
+    for t in ("t0", "t1", "t2"):
+        cache.free(t)
+    assert cache.free_pages == total
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_refcount_invariants_random_ops(seed):
+    """Seeded-random alloc/share/free sequences (hypothesis-style, but
+    dependency-free so it always runs)."""
+    rng = random.Random(seed)
+    ops = [(rng.choice(["alloc", "share", "free"]),
+            rng.choice(["t0", "t1", "t2"]), rng.randint(0, 20))
+           for _ in range(rng.randint(5, 40))]
+    _run_refcount_ops(make_cache(), ops)
+
+
+@needs_hypothesis
+@settings(max_examples=150, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "share", "free"]),
+                          st.sampled_from(["t0", "t1", "t2"]),
+                          st.integers(0, 20)), max_size=40))
+def test_refcount_invariants_property(ops):
+    _run_refcount_ops(make_cache(), ops)
+
+
 # ---------------------------------------------------------------- CPT --
 def test_cpt_translate():
     c = CacheConfig()
@@ -102,6 +237,7 @@ def test_cpt_bounds():
         cpt.map(0, c.num_pages)
 
 
+@needs_hypothesis
 @settings(max_examples=100, deadline=None)
 @given(st.integers(0, 383), st.integers(0, 383),
        st.integers(0, 32 * 2**10 - 1))

@@ -318,6 +318,36 @@ def test_departure_grows_survivor_grants_and_chunks():
     assert srv.cache.free_pages == srv.cache.config.num_pages
 
 
+def test_degraded_kv_reservation_recorded_in_stats():
+    """Best-effort KV reservation: when the pool cannot back a second
+    tenant's full working-set want, admission degrades to what the pool
+    can spare instead of failing, and the shortfall is recorded in the
+    per-tenant stats (kv_reserved < kv_wanted) — the degraded tenant
+    still prefills and decodes to completion."""
+    from repro.launch.serve import MultiTenantServer
+    from repro.sim.driver import TenantSpec
+    specs = [TenantSpec("olmoe-1b-7b", arrive_at=0.0, prompt_len=256,
+                        n_inferences=6),
+             TenantSpec("olmoe-1b-7b", arrive_at=0.0, prompt_len=256,
+                        n_inferences=6)]
+    # each wants 16 KV pages; a 24-page pool fully backs the first and
+    # can only partially back the second
+    srv = MultiTenantServer([], batch=1, max_len=512, total_pages=24,
+                            tenants=specs, epoch_len=8)
+    out = srv.run(steps=8)
+    full = out["tenants"]["t0:olmoe-1b-7b"]
+    degraded = out["tenants"]["t1:olmoe-1b-7b"]
+    assert full["kv_wanted"] == degraded["kv_wanted"] == 16
+    assert full["kv_reserved"] == 16
+    assert 0 <= degraded["kv_reserved"] < degraded["kv_wanted"]
+    # degradation is best-effort, not denial of service
+    for info in (full, degraded):
+        assert info["tokens"] == 1 + 6
+        assert info["departed"]
+        assert sum(info["prefill_chunks"]) == 256
+    assert srv.cache.free_pages == srv.cache.config.num_pages
+
+
 def test_poisson_arrivals_with_prompts_serve_end_to_end():
     """PoissonArrivals drives the real server with string arch ids and
     prompts — the shared arrival vocabulary of sim and serving."""
