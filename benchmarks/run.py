@@ -23,8 +23,12 @@ wall-time budget.
 ``--prefix`` runs the session-replay prefix-dedup benchmark (dedup on
 vs off: prefill-token savings, warm-arrival p95 TTFT, bit-identical
 decode) and records the ``prefix`` entry; ``--fleet`` runs the
-4-replica fleet-scaling benchmark under forced host devices.  Both
-merge into BENCH_serve.json without disturbing the other modes'
+4-replica fleet-scaling benchmark under forced host devices;
+``--quant`` runs the precision-for-residency benchmark (int8 KV vs
+native on an oversubscribed page pool: effective-pages gain, tokens/s
+ratio, decode-accuracy bound, plus the analytic quantized-kernel
+roofline gate under ``--check``) and records the ``quant`` entry.  All
+three merge into BENCH_serve.json without disturbing the other modes'
 entries.
 """
 from __future__ import annotations
@@ -491,6 +495,150 @@ def serve_prefix_bench() -> dict:
     }
 
 
+def _quant_decode_accuracy(kv_dtype: str = "int8", steps: int = 8) -> dict:
+    """Model-level accuracy probe: yi-9b reduced decode with a quantized
+    KV cache vs the native reference, teacher-forced on the native
+    stream so every step's logits compare like-for-like.  Returns the
+    min per-step cosine similarity and max abs logits error — the
+    numbers the documented accuracy bound (cosine >= 0.999) gates."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import model as M
+    from repro.models.base import get_arch
+    from repro.models.transformer import (decode_step, init_caches,
+                                          prefill_chunk)
+
+    cfg = get_arch("yi-9b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, P = 1, 128
+    max_len = P + steps
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                              cfg.vocab_size)
+    streams = {}
+    for kv in ("native", kv_dtype):
+        caches = init_caches(params, cfg, B, max_len, kv_dtype=kv)
+        logits, caches = prefill_chunk(params, toks, caches, jnp.int32(0),
+                                       cfg)
+        streams[kv] = {"caches": caches, "logits": [logits[:, -1:, :]]}
+    cos_min, err_max = 1.0, 0.0
+    token = jnp.argmax(streams["native"]["logits"][0][:, -1, :],
+                       axis=-1)[:, None].astype(jnp.int32)
+    for i in range(steps):
+        nxt = None
+        for kv, st in streams.items():
+            logits, st["caches"] = decode_step(params, token,
+                                               st["caches"],
+                                               jnp.int32(P + i), cfg)
+            st["logits"].append(logits[:, -1:, :])
+            if kv == "native":
+                nxt = jnp.argmax(logits[:, -1, :],
+                                 axis=-1)[:, None].astype(jnp.int32)
+        a = np.asarray(streams["native"]["logits"][-1], np.float64).ravel()
+        b = np.asarray(streams[kv_dtype]["logits"][-1], np.float64).ravel()
+        cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b)))
+        cos_min = min(cos_min, cos)
+        err_max = max(err_max, float(np.abs(a - b).max()))
+        token = nxt
+    return {"kv_dtype": kv_dtype, "steps": steps,
+            "min_cosine": round(cos_min, 6),
+            "max_abs_err": round(err_max, 4)}
+
+
+def serve_quant_bench() -> dict:
+    """Precision-for-residency benchmark (the `quant` BENCH_serve.json
+    entry): three yi-9b tenants with 1024-token prompts and 12-step
+    decode budgets admitted against a fixed 128-page pool, served by
+    two identical servers — native KV vs int8 KV with per-page scales.
+
+    At native width each tenant's KV working set wants ~64 pages, so
+    three tenants oversubscribe the pool and the later reservations
+    degrade; at int8 (+ per-row fp32 scales) the same working set
+    prices at ~18 pages and every tenant stays fully resident — the
+    ``effective_pages_gain`` is the per-tenant native/int8 reservation
+    ratio (analytic, machine-independent; the >=1.8x CI floor).  Both
+    servers warm once then alternate measured scenario replays
+    (medians), reporting the quant/native tokens/s ratio (CI gates
+    <2x regression; a ratio above 1.0 means the freed pages bought
+    back more throughput than the dequant path costs).  The model-level
+    accuracy probe rides along: int8-KV decode logits must stay within
+    cosine >= 0.999 of the native reference (the documented bound)."""
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.launch.serve import MultiTenantServer, _kv_reserve_pages
+    from repro.models.base import get_arch
+    from repro.sim.driver import TenantSpec
+
+    def specs():
+        return [TenantSpec("yi-9b", arrive_at=0.0, n_inferences=12,
+                           prompt_len=1024, param_seed=7,
+                           prompt_seed=100 + i)
+                for i in range(3)]
+
+    cfg = get_arch("yi-9b").reduced()
+    want_native = _kv_reserve_pages(cfg, 1, 1024, "native")
+    want_int8 = _kv_reserve_pages(cfg, 1, 1024, "int8")
+    pages_gain = want_native / want_int8
+
+    steps, reps = 24, 3
+    kw = dict(batch=1, max_len=2048, total_pages=128, epoch_len=8)
+    servers, metrics = {}, {}
+    for kv in ("native", "int8"):
+        srv = MultiTenantServer([], tenants=specs(), kv_dtype=kv, **kw)
+        srv.run(steps)            # compile warmup: same shapes, cold
+        servers[kv] = srv
+        metrics[kv] = {"tps": [], "reserved": [], "wanted": []}
+    for _ in range(reps):         # alternate: drift hits both modes
+        for kv, srv in servers.items():
+            srv.enqueue(specs())
+            out = srv.run(steps)
+            metrics[kv]["tps"].append(out["tokens_per_s"])
+            infos = list(out["tenants"].values())
+            metrics[kv]["reserved"].append(
+                sum(i["kv_reserved"] for i in infos))
+            metrics[kv]["wanted"].append(
+                sum(i["kv_wanted"] for i in infos))
+    tps_n = float(np.median(metrics["native"]["tps"]))
+    tps_q = float(np.median(metrics["int8"]["tps"]))
+    ratio = tps_q / max(tps_n, 1e-9)
+    resident_q = (metrics["int8"]["reserved"][-1]
+                  == metrics["int8"]["wanted"][-1])
+    degraded_n = (metrics["native"]["reserved"][-1]
+                  < metrics["native"]["wanted"][-1])
+    acc = _quant_decode_accuracy("int8")
+    if ratio < 1.0:
+        print(f"[bench] WARNING int8 KV tokens/s only {ratio:.2f}x native",
+              file=sys.stderr)
+    emit("serve_quant_native", 0.0,
+         f"{tps_n:.1f} tok/s | kv {metrics['native']['reserved'][-1]}/"
+         f"{metrics['native']['wanted'][-1]}p reserved (native)",
+         extra={"tokens_per_s": round(tps_n, 1)})
+    emit("serve_quant_int8", 0.0,
+         f"{tps_q:.1f} tok/s ({ratio:.2f}x) | kv "
+         f"{metrics['int8']['reserved'][-1]}/"
+         f"{metrics['int8']['wanted'][-1]}p | {pages_gain:.2f}x effective "
+         f"pages | cos {acc['min_cosine']:.5f}",
+         extra={"tokens_per_s": round(tps_q, 1),
+                "effective_pages_gain": round(pages_gain, 2)})
+    return {
+        "workload": {"arch": "yi-9b", "tenants": 3, "prompt_len": 1024,
+                     "decode_budget": 12, "steps": steps, "pages": 128,
+                     "epoch_len": kw["epoch_len"]},
+        "native": {"tokens_per_s": round(tps_n, 1),
+                   "kv_pages_per_tenant": want_native,
+                   "fully_resident": not degraded_n},
+        "int8": {"tokens_per_s": round(tps_q, 1),
+                 "kv_pages_per_tenant": want_int8,
+                 "fully_resident": resident_q},
+        "effective_pages_gain": round(pages_gain, 2),
+        "tokens_per_s_ratio": round(ratio, 2),
+        "accuracy": acc,
+        "accuracy_bound": {"min_cosine": 0.999},
+    }
+
+
 def _check_serve(baseline: dict, fresh: dict) -> int:
     """CI gate mirroring the BENCH_nec gate: a >2x tokens/s regression
     of the pipelined loop — or of the mixed-workload continuous-batching
@@ -501,7 +649,12 @@ def _check_serve(baseline: dict, fresh: dict) -> int:
     ISSUE-6 acceptance floor: >=3x critical-path speedup at 4 replicas
     and balanced routing.  A fresh `prefix` entry is gated on the
     ISSUE-7 acceptance floor: >=30% prefill-token savings, >=1.5x warm
-    p95 TTFT vs dedup-off, and bit-identical decode streams."""
+    p95 TTFT vs dedup-off, and bit-identical decode streams.  A fresh
+    `quant` entry is gated on the ISSUE-8 acceptance floor: >=1.8x
+    effective KV pages per tenant at int8, <2x tokens/s regression vs
+    the native-KV server, full int8 residency on the oversubscribed
+    pool, and the documented accuracy bound (decode logits cosine >=
+    0.999 vs the native reference)."""
     failures = []
     base = baseline.get("pipelined", {}).get("tokens_per_s", 0.0)
     got = fresh.get("pipelined", {}).get("tokens_per_s", 0.0)
@@ -552,6 +705,30 @@ def _check_serve(baseline: dict, fresh: dict) -> int:
         if bon and gon < bon / 2.0:
             failures.append(f"serve_prefix: {gon:.1f} tok/s (dedup on) is "
                             f"<0.5x the baseline {bon:.1f} tok/s")
+    got_q = fresh.get("quant", {})
+    if got_q:
+        pg = got_q.get("effective_pages_gain", 0.0)
+        if pg < 1.8:
+            failures.append(f"serve_quant: effective-pages gain {pg:.2f}x "
+                            f"is below the 1.8x acceptance floor")
+        qr = got_q.get("tokens_per_s_ratio", 0.0)
+        if qr < 0.5:
+            failures.append(f"serve_quant: int8 tokens/s is {qr:.2f}x "
+                            f"native — a >2x regression")
+        if not got_q.get("int8", {}).get("fully_resident", False):
+            failures.append("serve_quant: int8 tenants did not stay fully "
+                            "resident on the oversubscribed pool")
+        cos = got_q.get("accuracy", {}).get("min_cosine", 0.0)
+        bound = got_q.get("accuracy_bound", {}).get("min_cosine", 0.999)
+        if cos < bound:
+            failures.append(f"serve_quant: decode cosine {cos:.5f} below "
+                            f"the documented {bound} bound")
+        bqt = baseline.get("quant", {}).get("int8", {}) \
+                      .get("tokens_per_s", 0.0)
+        gqt = got_q.get("int8", {}).get("tokens_per_s", 0.0)
+        if bqt and gqt < bqt / 2.0:
+            failures.append(f"serve_quant: {gqt:.1f} tok/s (int8) is "
+                            f"<0.5x the baseline {bqt:.1f} tok/s")
     for f in failures:
         print(f"[bench-check] FAIL {f}", file=sys.stderr)
     if not failures:
@@ -567,6 +744,11 @@ def _check_serve(baseline: dict, fresh: dict) -> int:
             parts.append(
                 f"prefix -{got_p.get('prefill_savings_frac', 0) * 100:.0f}% "
                 f"prefill @ {got_p.get('warm_ttft_ratio', 0):.2f}x warm TTFT")
+        if got_q:
+            parts.append(
+                f"quant {got_q.get('effective_pages_gain', 0):.2f}x pages "
+                f"@ {got_q.get('tokens_per_s_ratio', 0):.2f}x tok/s, cos "
+                f"{got_q.get('accuracy', {}).get('min_cosine', 0):.5f}")
         print(f"[bench-check] serve ok ({'; '.join(parts)})",
               file=sys.stderr)
     return 1 if failures else 0
@@ -721,6 +903,32 @@ def main() -> None:
             _write_serve_json(serve_payload)
         else:
             print("[bench] prefix check FAILED; baseline left untouched",
+                  file=sys.stderr)
+        sys.exit(rc)
+    if "--quant" in args:
+        # precision-for-residency entry (CI bench-smoke job, third
+        # step): gates on the committed BENCH_serve.json, the ISSUE-8
+        # floors, and the analytic quantized-kernel rooflines
+        t0 = time.time()
+        print("name,us_per_call,derived")
+        serve_payload = {"schema": 1, "quant": serve_quant_bench()}
+        wall_s = time.time() - t0
+        rc = 0
+        if budget_s and wall_s > budget_s:
+            print(f"[bench-check] FAIL wall {wall_s:.1f}s exceeds budget "
+                  f"{budget_s:.0f}s", file=sys.stderr)
+            rc = 1
+        if "--check" in args:
+            from benchmarks.roofline import check_quant_rooflines
+            if check_quant_rooflines():
+                rc = 1
+            if BENCH_SERVE_JSON.exists():
+                rc |= _check_serve(json.loads(BENCH_SERVE_JSON.read_text()),
+                                   serve_payload)
+        if rc == 0:
+            _write_serve_json(serve_payload)
+        else:
+            print("[bench] quant check FAILED; baseline left untouched",
                   file=sys.stderr)
         sys.exit(rc)
     baseline = None

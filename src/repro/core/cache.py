@@ -107,6 +107,12 @@ class SharedCache:
         self._free: List[int] = list(range(config.num_pages))  # min-heap
         self._holders: Dict[int, Set[str]] = {}   # pcpn -> holder ids
         self._pages_of: Dict[str, Set[int]] = {}  # tenant id -> pcpns
+        # per-page dequantization scale (precision-for-residency): the
+        # max |amax|/qmax over the KV token rows a quantized page holds,
+        # recorded alongside the page table and dropped when the page
+        # returns to the pool.  Pages of native-precision tenants have
+        # no entry.
+        self._page_scale: Dict[int, float] = {}
         # called with the page shortfall when alloc would fail; may free
         # pages (e.g. PrefixIndex LRU eviction) and the alloc retries
         self.pressure_hook: Optional[Callable[[int], int]] = None
@@ -185,10 +191,28 @@ class SharedCache:
             holders.discard(tenant)
             if not holders:
                 del self._holders[p]
+                self._page_scale.pop(p, None)
                 heapq.heappush(self._free, p)
         if not owned:
             self._pages_of.pop(tenant, None)
         return len(to_free)
+
+    # ---- per-page quantization scales -------------------------------
+    def set_page_scale(self, pcpn: int, scale: float) -> None:
+        """Record the dequantization scale of an allocated quantized
+        page (max per-row scale over the token rows it holds)."""
+        if pcpn not in self._holders:
+            raise KeyError(f"page {pcpn} is not allocated")
+        self._page_scale[pcpn] = float(scale)
+
+    def page_scale(self, pcpn: int) -> Optional[float]:
+        """Scale recorded for a page, or None (free / native page)."""
+        return self._page_scale.get(pcpn)
+
+    def page_scales_of(self, tenant: str) -> Dict[int, float]:
+        return {p: self._page_scale[p]
+                for p in self._pages_of.get(tenant, ())
+                if p in self._page_scale}
 
     def refcount(self, pcpn: int) -> int:
         return len(self._holders.get(pcpn, ()))

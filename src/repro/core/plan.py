@@ -51,9 +51,15 @@ class FfnPlan:
 
 @dataclasses.dataclass(frozen=True)
 class AttnPlan:
-    """Flash-attention block sizes (prefill self-attention path)."""
+    """Flash-attention block sizes (prefill self-attention path).
+
+    ``kv_dtype`` is the precision-for-residency axis: "native" keeps
+    K/V in the compute dtype; "int8"/"fp8_e4m3" stream quantized K/V
+    blocks through the dequant-fused kernel with per-row fp32 scales.
+    """
     block_q: int = LANE
     block_kv: int = LANE
+    kv_dtype: str = "native"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,12 +72,17 @@ class KernelPlan:
     attn: AttnPlan = AttnPlan()
     ssm_chunk: int = 0                   # 0 = architecture default
 
+    @property
+    def kv_dtype(self) -> str:
+        return self.attn.kv_dtype
+
     def describe(self) -> str:
+        kv = "" if self.attn.kv_dtype == "native" else f"+kv:{self.attn.kv_dtype}"
         if self.ffn.fused:
             return (f"LBM[bs{self.ffn.block_s}xbf{self.ffn.block_f}]"
-                    f"@{self.pages}p")
+                    f"@{self.pages}p{kv}")
         t = self.ffn.up_tile
-        return f"LWM[{t.bm}x{t.bn}x{t.bk}]@{self.pages}p"
+        return f"LWM[{t.bm}x{t.bn}x{t.bk}]@{self.pages}p{kv}"
 
 
 def lower_ffn(seq_block: int, d_model: int, d_ff: int, dtype_bytes: int,
@@ -100,20 +111,28 @@ def lower_ffn(seq_block: int, d_model: int, d_ff: int, dtype_bytes: int,
     return FfnPlan(fused=False, up_tile=up, down_tile=down)
 
 
-def lower_attn(head_dim: int, dtype_bytes: int, pages: int) -> AttnPlan:
+def lower_attn(head_dim: int, dtype_bytes: int, pages: int,
+               kv_dtype: str = "native",
+               kv_dtype_bytes: Optional[int] = None) -> AttnPlan:
     """Largest flash-attention blocks whose working set (q tile, k/v
-    double buffers, fp32 stats + score tile) fits the grant."""
+    double buffers, fp32 stats + score tile) fits the grant.  Quantized
+    KV prices the k/v double buffers at the storage width plus the fp32
+    per-row scale stripe, so a tight grant that only admits LANE blocks
+    at bf16 can admit larger blocks at int8."""
     if head_dim <= 0:
-        return AttnPlan()
+        return AttnPlan(kv_dtype=kv_dtype)
+    kvb = dtype_bytes if kv_dtype_bytes is None else kv_dtype_bytes
+    scale = 4 if kvb < dtype_bytes else 0  # fp32 scale per streamed row
     cap = pages * PAGE_BYTES
     best = (LANE, LANE)
     for bq in (128, 256, 512):
         for bkv in (128, 256, 512):
-            vb = ((bq + 4 * bkv) * head_dim * dtype_bytes
+            vb = (bq * head_dim * dtype_bytes
+                  + 4 * bkv * (head_dim * kvb + scale)
                   + bq * head_dim * 4 + bq * bkv * 4)
             if vb <= cap and bq * bkv > best[0] * best[1]:
                 best = (bq, bkv)
-    return AttnPlan(*best)
+    return AttnPlan(*best, kv_dtype=kv_dtype)
 
 
 def lower_ssm_chunk(default_chunk: int, pages: int) -> int:
@@ -165,18 +184,28 @@ def lower_prefill_chunk(plan: KernelPlan, *, d_model: int, d_ff: int,
 def lower_selection(sel: Selection, pages: int, *, seq_block: int,
                     d_model: int, d_ff: int, dtype_bytes: int,
                     head_dim: int = 0, ssm_chunk: int = 0,
-                    down_pages: Optional[int] = None) -> KernelPlan:
+                    down_pages: Optional[int] = None,
+                    kv_dtype: str = "native") -> KernelPlan:
     """Lower a granted Selection into the KernelPlan the model stack
     executes.  ``pages`` is the grant actually held for the (head)
     layer; ``down_pages`` optionally gives the down-projection GEMM its
     own grant when the runtime re-allocates between the two FFN GEMMs.
+    ``kv_dtype`` pins the KV precision the tenant was admitted at
+    ("native" | "int8" | "fp8_e4m3"); it rides the plan so jit entries
+    keyed on the plan compile the matching cache structure.
     """
     want_fused = sel.candidate.kind == "LBM"
+    if kv_dtype == "native":
+        kv_bytes = dtype_bytes
+    else:
+        from repro.core.types import elem_bytes
+        kv_bytes = elem_bytes(kv_dtype)
     ffn = lower_ffn(seq_block, d_model, d_ff, dtype_bytes, pages,
                     want_fused, down_pages=down_pages)
     return KernelPlan(
         kind="LBM" if ffn.fused else "LWM",
         pages=pages,
         ffn=ffn,
-        attn=lower_attn(head_dim, dtype_bytes, pages),
+        attn=lower_attn(head_dim, dtype_bytes, pages,
+                        kv_dtype=kv_dtype, kv_dtype_bytes=kv_bytes),
         ssm_chunk=lower_ssm_chunk(ssm_chunk, pages))

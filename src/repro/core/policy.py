@@ -137,6 +137,33 @@ def charge_and_plan(task, cand: MappingCandidate,
 
 
 # ---------------------------------------------------------------------------
+# Precision-for-residency: the KV-precision ladder, highest fidelity
+# first.  Admission walks it downward until a tenant's FULL KV
+# reservation fits the free pool — dropping precision to keep residency
+# beats keeping precision and spilling (degraded grants, starved
+# prefill chunks).
+# ---------------------------------------------------------------------------
+KV_PRECISION_LADDER: Tuple[str, ...] = ("native", "fp8_e4m3", "int8")
+
+
+def choose_kv_dtype(want_pages: Dict[str, int], free_pages: int,
+                    ladder: Tuple[str, ...] = KV_PRECISION_LADDER) -> str:
+    """Pick the highest-fidelity KV precision whose full reservation
+    fits ``free_pages``.  ``want_pages`` maps each ladder rung to the
+    tenant's KV page reservation at that precision (as priced by the
+    serving layer's reservation math).  When nothing fits — the pool is
+    oversubscribed outright — returns the ladder bottom, which
+    maximizes the fraction of the reservation the degradation path can
+    still satisfy."""
+    for kv in ladder:
+        if kv not in want_pages:
+            continue
+        if want_pages[kv] <= free_pages:
+            return kv
+    return ladder[-1]
+
+
+# ---------------------------------------------------------------------------
 class CamdnPolicy:
     """CaMDN(Full): Algorithm 1 dynamic allocation + LBM + timeouts,
     delegated to :class:`DynamicCacheAllocator`."""

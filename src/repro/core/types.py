@@ -105,6 +105,37 @@ class ModelGraph:
         return sum(l.weight_bytes for l in self.layers)
 
 
+# Byte width per element, by dtype name.  Single source of truth for
+# every capacity/traffic computation (serve working sets, KV page
+# reservations, roofline byte counts).  Deliberately NOT a .get() with a
+# default: an unknown dtype silently priced at 4 bytes once under-counted
+# bf16 working sets by 2x, so unknown names fail loud instead.
+_ELEM_BYTES = {
+    "float64": 8,
+    "float32": 4,
+    "int32": 4,
+    "bfloat16": 2,
+    "float16": 2,
+    "int8": 1,
+    "uint8": 1,
+    "fp8_e4m3": 1,
+    "float8_e4m3fn": 1,
+    "fp8_e5m2": 1,
+    "float8_e5m2": 1,
+}
+
+
+def elem_bytes(dtype: str) -> int:
+    """Bytes per element for a dtype name; raises on unknown dtypes."""
+    try:
+        return _ELEM_BYTES[dtype]
+    except KeyError:
+        raise ValueError(
+            f"elem_bytes: unknown dtype {dtype!r} (known: "
+            f"{sorted(_ELEM_BYTES)}); refusing to guess a byte width"
+        ) from None
+
+
 def align_up(x: int, a: int) -> int:
     return ((x + a - 1) // a) * a
 

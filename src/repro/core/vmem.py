@@ -31,6 +31,24 @@ def sublane(dtype_bytes: int) -> int:
     return {4: 8, 2: 16, 1: 32}.get(dtype_bytes, 8)
 
 
+# Per-row quantization scale width: one fp32 scale per (token, kv-head)
+# row of a quantized KV cache, stored alongside the page table entries.
+KV_SCALE_BYTES = 4
+
+
+def kv_row_bytes(kv_heads: int, head_dim: int, kv_eb: int,
+                 scaled: bool = False) -> int:
+    """Bytes one cached token row (K+V across the KV heads) occupies at
+    element width ``kv_eb``; ``scaled`` adds the per-row fp32 dequant
+    scales a quantized cache carries.  Single source of truth for the
+    KV page reservation math in launch/serve.py and the effective-pages
+    accounting in the quant benchmark."""
+    row = 2 * kv_heads * head_dim * kv_eb
+    if scaled:
+        row += 2 * kv_heads * KV_SCALE_BYTES
+    return row
+
+
 @dataclasses.dataclass(frozen=True)
 class TileConfig:
     """A matmul tile choice for kernels/cache_matmul.py."""
@@ -190,11 +208,13 @@ def lower_matmul_tile(m: int, n: int, k: int, dtype_bytes: int,
 
 def lower_selection(sel, pages: int, *, seq_block: int, d_model: int,
                     d_ff: int, dtype_bytes: int, head_dim: int = 0,
-                    ssm_chunk: int = 0, down_pages: Optional[int] = None):
+                    ssm_chunk: int = 0, down_pages: Optional[int] = None,
+                    kv_dtype: str = "native"):
     """Lower a granted :class:`~repro.core.allocator.Selection` into a
     :class:`~repro.core.plan.KernelPlan` (deferred import: plan.py
     builds on this module's tile machinery)."""
     from repro.core.plan import lower_selection as _lower
     return _lower(sel, pages, seq_block=seq_block, d_model=d_model,
                   d_ff=d_ff, dtype_bytes=dtype_bytes, head_dim=head_dim,
-                  ssm_chunk=ssm_chunk, down_pages=down_pages)
+                  ssm_chunk=ssm_chunk, down_pages=down_pages,
+                  kv_dtype=kv_dtype)

@@ -18,18 +18,10 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-
-def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Symmetric per-tensor int8: returns (q, scale)."""
-    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
-                 ).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    return q.astype(jnp.float32) * scale
+# The symmetric int8 pair now lives in the shared quant module (the KV
+# cache and dequant-fused kernels use the same helpers); re-exported
+# here for the historical import path.
+from repro.kernels.quant import dequantize_int8, quantize_int8  # noqa: F401
 
 
 def init_error_state(params: Any) -> Any:

@@ -36,6 +36,55 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _matmul_quant_kernel(a_ref, b_ref, s_ref, o_ref, acc_ref, *, n_k: int):
+    """Dequant-fused tile matmul: the B tile arrives in VMEM at int8/fp8
+    width and is dequantized in-register against its per-column fp32
+    scale stripe right before the MXU dot — no fp copy of B is ever
+    materialized in HBM or VMEM."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = b_ref[...].astype(jnp.float32) * s_ref[0, :][None, :]
+    acc_ref[...] += jnp.dot(a_ref[...], b,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def cache_matmul_quant(a: jnp.ndarray, b: jnp.ndarray, b_scale: jnp.ndarray,
+                       tile: TileConfig, interpret: bool = True
+                       ) -> jnp.ndarray:
+    """C[M,N] = A[M,K] @ dequant(B[K,N]) with B quantized (int8/fp8)
+    and per-output-column scales ``b_scale`` [1, N].  Same grid/tiling
+    as :func:`cache_matmul`; the B operand streams at quantized width,
+    cutting its HBM traffic by the storage ratio, and the scale stripe
+    (4 bytes/column) rides the same j index map."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert b_scale.shape == (1, n), (b_scale.shape, n)
+    bm, bn, bk = min(tile.bm, m), min(tile.bn, n), min(tile.bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"shape ({m},{n},{k}) not divisible by tile ({bm},{bn},{bk})"
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_quant_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b, b_scale.astype(jnp.float32))
+
+
 def cache_matmul(a: jnp.ndarray, b: jnp.ndarray, tile: TileConfig,
                  interpret: bool = True) -> jnp.ndarray:
     """C[M,N] = A[M,K] @ B[K,N] with the tile sizes of one mapping

@@ -12,9 +12,11 @@ import jax.numpy as jnp
 
 from repro.core.plan import FfnPlan
 from repro.core.vmem import TileConfig, lower_matmul_tile
+from repro.kernels import quant as kquant
 from repro.kernels.block_fused_ffn import block_fused_ffn
-from repro.kernels.cache_matmul import cache_matmul
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.cache_matmul import cache_matmul, cache_matmul_quant
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_quantized)
 from repro.kernels.ssd_scan import ssd_chunk
 
 ON_TPU = any(d.platform == "tpu" for d in jax.devices())
@@ -78,16 +80,63 @@ def planned_ffn(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
     return planned_matmul(h, wd, plan.down_tile, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def planned_matmul_quant(a: jnp.ndarray, b: jnp.ndarray,
+                         b_scale: jnp.ndarray, tile: TileConfig,
+                         interpret: bool = INTERPRET) -> jnp.ndarray:
+    """Dequant-fused planned matmul: ``b`` pre-quantized (int8/fp8)
+    with per-column scales ``b_scale`` [1, N] (kernels.quant
+    .quantize_cols).  The B operand streams at quantized width through
+    the same grant-lowered tile as :func:`planned_matmul`."""
+    m, k = a.shape
+    _, n = b.shape
+    ap = _pad_to(_pad_to(a, 0, tile.bm), 1, tile.bk)
+    bp = _pad_to(_pad_to(b, 0, tile.bk), 1, tile.bn)
+    sp = _pad_to(b_scale, 1, tile.bn)
+    out = cache_matmul_quant(ap, bp, sp, tile, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def planned_ffn_quant(x: jnp.ndarray, wg, wg_s, wu, wu_s, wd, wd_s,
+                      plan: FfnPlan, interpret: bool = INTERPRET
+                      ) -> jnp.ndarray:
+    """SwiGLU FFN over pre-quantized weights (per-column scales), each
+    GEMM through the dequant-fused tiled kernel with the plan's tiles.
+    Quantized weights always execute tiled (LWM): the fused LBM kernel
+    keeps native weights — quantization exists to survive *tight*
+    grants, where the plan is tiled anyway."""
+    tile_up = plan.up_tile if plan.up_tile is not None else \
+        lower_matmul_tile(x.shape[0], wg.shape[1], x.shape[1], 1, plan.vmem_pages)
+    tile_dn = plan.down_tile if plan.down_tile is not None else tile_up
+    g = planned_matmul_quant(x, wg, wg_s, tile_up, interpret=interpret)
+    u = planned_matmul_quant(x, wu, wu_s, tile_up, interpret=interpret)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+         ).astype(x.dtype)
+    return planned_matmul_quant(h, wd, wd_s, tile_dn, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
-                                             "interpret"))
+                                             "kv_dtype", "interpret"))
 def attention(q, k, v, causal: bool = True, block_q: int = 128,
-              block_kv: int = 128, interpret: bool = INTERPRET):
+              block_kv: int = 128, kv_dtype: str = "native",
+              interpret: bool = INTERPRET):
+    """Flash attention; ``kv_dtype`` != "native" quantizes K/V per row
+    and runs the dequant-fused kernel (the plan-lowered prefill path of
+    a precision-downgraded tenant)."""
     S = q.shape[2]
     bq = min(block_q, S)
     bkv = min(block_kv, k.shape[2])
     qp = _pad_to(q, 2, bq)
     kp = _pad_to(k, 2, bkv)
     vp = _pad_to(v, 2, bkv)
+    if kv_dtype != "native":
+        kq, ks = kquant.quantize_rows(kp, kv_dtype)
+        vq, vs = kquant.quantize_rows(vp, kv_dtype)
+        out = flash_attention_quantized(
+            qp, kq, vq, ks[..., 0], vs[..., 0], causal=causal,
+            block_q=bq, block_kv=bkv, interpret=interpret)
+        return out[:, :, :S, :]
     out = flash_attention(qp, kp, vp, causal=causal, block_q=bq,
                           block_kv=bkv, interpret=interpret)
     return out[:, :, :S, :]

@@ -1,0 +1,112 @@
+"""Shared symmetric quantization helpers (precision-for-residency).
+
+One module owns every quantize/dequantize used in the repo:
+
+* gradient compression (``distributed/compression.py`` re-exports the
+  per-tensor int8 pair it historically defined), and
+* the quantized KV cache / dequant-fused kernels, which use *per-row*
+  scales: one fp32 scale per cached token row per KV head, so a single
+  decode step can quantize its own row without rescaling history, and
+  chunked prefill produces bit-identical caches to one-shot prefill
+  (the scale of a row depends only on that row).
+
+All quantization here is symmetric (no zero point): ``q = round(x / s)``
+with ``s = amax / qmax`` and the ``amax == 0`` guard mapping all-zero
+inputs to scale 1.0 so dequantization is exact on zeros.  ``qmax`` is
+127 for int8 and 448 for float8_e4m3 (finfo max), giving a worst-case
+round-trip error of ``s / 2`` per element for int8.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# kv_dtype plan axis values.  "native" means the cache keeps the model
+# compute dtype (bf16 on TPU, f32 in the reduced CPU configs).
+KV_DTYPES: Tuple[str, ...] = ("native", "fp8_e4m3", "int8")
+
+# name -> (storage dtype, symmetric quantization range max)
+_QUANT_SPECS = {
+    "int8": (jnp.int8, 127.0),
+    "fp8_e4m3": (jnp.float8_e4m3fn, 448.0),
+}
+
+
+def is_quantized(kv_dtype: str) -> bool:
+    return kv_dtype in _QUANT_SPECS
+
+
+def kv_storage_dtype(kv_dtype: str):
+    """jnp dtype a quantized KV cache stores K/V in."""
+    return _QUANT_SPECS[kv_dtype][0]
+
+
+def kv_qmax(kv_dtype: str) -> float:
+    return _QUANT_SPECS[kv_dtype][1]
+
+
+def kv_dtype_of(dtype) -> str:
+    """kv_dtype name for a storage jnp dtype (inverse of
+    :func:`kv_storage_dtype`); raises on non-quantized dtypes."""
+    for name, (dt, _) in _QUANT_SPECS.items():
+        if jnp.dtype(dtype) == jnp.dtype(dt):
+            return name
+    raise ValueError(f"{dtype} is not a quantized KV storage dtype")
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_rows(x: jnp.ndarray, kv_dtype: str
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric quantization with one scale per trailing-dim row.
+
+    Returns ``(q, scale)`` with ``q.shape == x.shape`` in the storage
+    dtype and ``scale.shape == x.shape[:-1] + (1,)`` in fp32.  For KV
+    rows shaped ``[B, S, Hkv, hd]`` this is one scale per (batch, token,
+    kv-head) — the granularity the per-page scale table aggregates.
+    """
+    dt, qmax = _QUANT_SPECS[kv_dtype]
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    y = x.astype(jnp.float32) / scale
+    if dt == jnp.int8:
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(dt)
+    else:
+        q = jnp.clip(y, -qmax, qmax).astype(dt)
+    return q, scale
+
+
+def dequantize_rows(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of :func:`quantize_rows` (scale broadcasts over the row)."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_cols(w: jnp.ndarray, kv_dtype: str = "int8"
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-output-column symmetric quantization for a ``[K, N]`` weight.
+
+    Returns ``(q, scale)`` with ``scale.shape == (1, N)`` — the layout
+    the dequant-fused matmul kernel streams alongside each N-tile.
+    """
+    dt, qmax = _QUANT_SPECS[kv_dtype]
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    y = w.astype(jnp.float32) / scale
+    if dt == jnp.int8:
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(dt)
+    else:
+        q = jnp.clip(y, -qmax, qmax).astype(dt)
+    return q, scale

@@ -105,12 +105,13 @@ from repro.core.cache import CacheConfig
 from repro.core.mapping import MapperConfig
 from repro.core.mct import MCT, ModelMapping
 from repro.core.plan import KernelPlan, lower_prefill_chunk
-from repro.core.policy import ReplicaAllocators, ReplicaControl
+from repro.core.policy import (KV_PRECISION_LADDER, ReplicaAllocators,
+                               ReplicaControl, choose_kv_dtype)
 from repro.core.runtime import TenantModel, TenantTask
 from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph, \
-    ceil_div
+    ceil_div, elem_bytes
 from repro.core.vmem import (LANE, PAGE_BYTES, VMEM_PAGES, fused_ffn_pages,
-                             lower_selection)
+                             kv_row_bytes, lower_selection)
 from repro.distributed import sharding as shard
 from repro.models import model as M
 from repro.models.base import ArchConfig, get_arch
@@ -121,8 +122,11 @@ from repro.sim.driver import FleetScenario, PoissonArrivals, TenantSpec
 
 
 def _elem_bytes(cfg: ArchConfig) -> int:
-    """Activation/weight element size for the VMEM working-set math."""
-    return {"bfloat16": 2, "float16": 2, "int8": 1}.get(cfg.dtype, 4)
+    """Activation/weight element size for the VMEM working-set math.
+    Delegates to :func:`repro.core.types.elem_bytes`, which raises on an
+    unknown dtype string — the old local table silently defaulted to 4,
+    so a typo'd cfg.dtype inflated every working-set quote unnoticed."""
+    return elem_bytes(cfg.dtype)
 
 
 def _ffn_graph(name: str, cfg: ArchConfig, seq_block: int) -> ModelGraph:
@@ -155,20 +159,27 @@ def _vmem_mapper(total_pages: int) -> MapperConfig:
                         npu_subspace_bytes=total_pages * PAGE_BYTES)
 
 
-def _kv_reserve_pages(cfg: ArchConfig, batch: int, tokens: int) -> int:
+def _kv_reserve_pages(cfg: ArchConfig, batch: int, tokens: int,
+                      kv_dtype: str = "native") -> int:
     """Pages an admitted prompt-tenant reserves for its KV / state
     working set — the long-lived VMEM occupant a real prompt brings
     (the decode cache prefix its chunks fill).  Attention archs scale
     with the prompt; SSM state is O(1); hybrids carry both.  This is
     what makes the serving-side dynamic allocation visible: reserved
     pages squeeze co-tenants' grants (and chunk sizes) and are returned
-    on departure."""
+    on departure.  ``kv_dtype`` prices the KV rows at the tenant's
+    chosen storage precision (plus the per-row fp32 scale stripes a
+    quantized cache carries) — precision-for-residency: the int8 quote
+    is what lets a starved tenant's reservation fit the pool."""
     eb = _elem_bytes(cfg)
+    quantized = kv_dtype != "native"
+    kv_eb = elem_bytes(kv_dtype) if quantized else eb
     G = num_groups(cfg)
     kv_groups = G if cfg.family != "ssm" else 0
     ssm_groups = {"ssm": G, "hybrid": G * (cfg.attn_every - 1)}.get(
         cfg.family, 0)
-    kv = kv_groups * 2 * batch * tokens * cfg.num_kv_heads * cfg.hd * eb
+    row = kv_row_bytes(cfg.num_kv_heads, cfg.hd, kv_eb, scaled=quantized)
+    kv = kv_groups * batch * tokens * row
     state = ssm_groups * batch * (
         (CONV_K - 1) * (cfg.d_inner + 2 * cfg.ssm_state) * eb
         + cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4)
@@ -217,6 +228,18 @@ def _prefix_candidates(prompt: np.ndarray, prompt_len: int,
     return [(l, prompt[:, :l].tobytes()) for l in lens]
 
 
+def _params_key(spec: TenantSpec, kv_dtype: str) -> str:
+    """Prefix-index params identity: the param seed, suffixed with the
+    KV storage precision when quantized.  A quantized cache snapshot is
+    only bit-valid for a tenant decoding at the same precision — the
+    suffix keeps mixed-precision tenants sharing one param seed from
+    attaching to each other's entries."""
+    key = f"ps{spec.param_seed}"
+    if kv_dtype != "native":
+        key += f"+kv:{kv_dtype}"
+    return key
+
+
 @dataclasses.dataclass
 class Tenant:
     tid: str
@@ -250,6 +273,8 @@ class Tenant:
     # ---- KV reservation accounting (best-effort degradation) --------
     kv_wanted: int = 0                    # pages the working set asks for
     kv_reserved: int = 0                  # pages actually reserved
+    # ---- precision-for-residency ------------------------------------
+    kv_dtype: str = "native"              # KV storage precision (plan axis)
     # ---- prefix-hash KV dedup ---------------------------------------
     pf_computed: int = 0                  # prompt tokens prefilled on-device
     prefix_hit: int = 0                   # prompt tokens attached from index
@@ -298,10 +323,18 @@ class MultiTenantServer:
                  steps_per_s: float = 1.0,
                  device: Any = None, replica: str = "",
                  control: Optional[ReplicaControl] = None,
-                 prefix_dedup: bool = False):
+                 prefix_dedup: bool = False,
+                 kv_dtype: str = "native"):
         assert admission in ("interleaved", "sequential"), admission
+        assert kv_dtype in KV_PRECISION_LADDER + ("auto",), kv_dtype
         self.qos_targets = qos_targets or {}
         self.prefix_dedup = bool(prefix_dedup)
+        # KV storage precision policy: a fixed rung pins every prompt
+        # tenant; "auto" walks the ladder per admission — the first
+        # precision whose full reservation fits the pool's current free
+        # pages wins, so a starved arrival trades precision for
+        # residency instead of degrading to a partial reservation
+        self.kv_dtype = kv_dtype
         self.epoch_len = max(1, int(epoch_len))
         self.pipeline = bool(pipeline)
         self.admission = admission
@@ -357,7 +390,8 @@ class MultiTenantServer:
         self._prefill_cores: Dict[str, Any] = {}
         self._fused_jits: Dict[Tuple, Any] = {}
         self._prefill_jits: Dict[Tuple, Any] = {}
-        self._seed_jits: Dict[str, Any] = {}   # arch -> prefix cache seeder
+        # (arch, kv_dtype) -> prefix cache seeder
+        self._seed_jits: Dict[Tuple[str, str], Any] = {}
         # persistent tenant-stacked caches per bucketed arch group: the
         # stacked buffer stays stacked (and donated) across epochs while
         # the bucket holds, instead of an O(cache bytes) restack/slice
@@ -514,6 +548,7 @@ class MultiTenantServer:
                  f"{spec.n_inferences or 0} > max_len {self.max_len}")
             t.prompt_len = spec.prompt_len
             t.prompt = _prompt_tokens(spec, i, cfg, self.batch)
+            t.kv_dtype = self._choose_kv_dtype(cfg, spec)
             # whole-prompt MCT for the sequential baseline, chunk-block
             # MCT for interleaved chunked prefill
             pf_block = (spec.prompt_len
@@ -524,11 +559,12 @@ class MultiTenantServer:
             self._align_lbm_to_vmem(ptm, cfg, max(pf_block, LANE))
             t.ptask = TenantTask(tid + "/pf", ptm, self.cache, self.nec,
                                  self.policy, replica=self.replica)
-            want = _kv_reserve_pages(cfg, self.batch, spec.prompt_len)
+            want = _kv_reserve_pages(cfg, self.batch, spec.prompt_len,
+                                     t.kv_dtype)
             t.kv_wanted = want
             shared: List[int] = []
             if self._dedup_eligible(spec, cfg):
-                t.dedup = (cfg.name, f"ps{spec.param_seed}")
+                t.dedup = (cfg.name, _params_key(spec, t.kv_dtype))
                 hit = self._prefix_lookup(t)
             if hit is not None:
                 # attach BEFORE allocating the private remainder: the
@@ -542,7 +578,7 @@ class MultiTenantServer:
                 # one dynamic-update-slice copy of the shared prefix
                 # into fresh zero caches: bit-identical to the state a
                 # cold tenant reaches after prefilling the same tokens
-                t.caches = self._put_caches(self._seed_fn(cfg)(
+                t.caches = self._put_caches(self._seed_fn(cfg, t.kv_dtype)(
                     hit.payload["snap"], prefix_len=hit.kv_len))
                 t.pf_pos = hit.kv_len
             # best-effort KV reservation (for the un-shared remainder):
@@ -561,7 +597,8 @@ class MultiTenantServer:
                 jnp.full((self.batch, 1), i % cfg.vocab_size, jnp.int32))
         if t.caches is None:
             t.caches = self._put_caches(
-                init_caches(params, cfg, self.batch, self.max_len))
+                init_caches(params, cfg, self.batch, self.max_len,
+                            kv_dtype=t.kv_dtype))
         t.admitted_wall = due_wall if due_wall is not None else time.time()
         self.tenants.append(t)
         self._unstack_bucket(cfg.name)
@@ -612,18 +649,38 @@ class MultiTenantServer:
                    if ent.parent is not None else None)
         return None
 
-    def _seed_fn(self, cfg: ArchConfig):
-        """Jitted prefix-seeding program, one per arch (jit keys the
-        static prefix_len variants).  The snapshot argument is NOT
-        donated: the resident entry keeps serving later arrivals."""
-        fn = self._seed_jits.get(cfg.name)
+    def _choose_kv_dtype(self, cfg: ArchConfig, spec: TenantSpec) -> str:
+        """KV storage precision for an arriving prompt tenant.  SSM
+        decode carries recurrent fp state, not row-addressed KV — never
+        quantized.  A fixed server policy pins the rung; ``auto`` prices
+        the full reservation at every rung of the precision ladder and
+        takes the first that fits the pool's current free pages
+        (falling through to the narrowest) — the paper's residency
+        pressure expressed as a precision downgrade instead of a
+        partial reservation."""
+        if cfg.family == "ssm" or cfg.family == "encdec":
+            return "native"
+        if self.kv_dtype != "auto":
+            return self.kv_dtype
+        want = {kv: _kv_reserve_pages(cfg, self.batch, spec.prompt_len, kv)
+                for kv in KV_PRECISION_LADDER}
+        return choose_kv_dtype(want, self.cache.free_pages)
+
+    def _seed_fn(self, cfg: ArchConfig, kv_dtype: str = "native"):
+        """Jitted prefix-seeding program, one per (arch, KV precision)
+        (jit keys the static prefix_len variants).  The snapshot
+        argument is NOT donated: the resident entry keeps serving later
+        arrivals."""
+        key = (cfg.name, kv_dtype)
+        fn = self._seed_jits.get(key)
         if fn is None:
             def seed(snap, prefix_len):
                 return seed_caches_from_prefix(cfg, self.batch,
                                                self.max_len, snap,
-                                               prefix_len)
+                                               prefix_len,
+                                               kv_dtype=kv_dtype)
             fn = jax.jit(seed, static_argnames=("prefix_len",))
-            self._seed_jits[cfg.name] = fn
+            self._seed_jits[key] = fn
         return fn
 
     def _batched_params(self, name: str):
@@ -789,7 +846,8 @@ class MultiTenantServer:
             sel, pages, seq_block=seq_block or max(self.batch, LANE),
             d_model=cfg.d_model, d_ff=cfg.d_ff,
             dtype_bytes=_elem_bytes(cfg), head_dim=cfg.hd,
-            ssm_chunk=cfg.ssm_chunk, down_pages=down_pages)
+            ssm_chunk=cfg.ssm_chunk, down_pages=down_pages,
+            kv_dtype=t.kv_dtype)
 
     def _schedule_epoch(self, t: Tenant, now: float,
                         k: int) -> Optional[KernelPlan]:
@@ -895,7 +953,8 @@ class MultiTenantServer:
         resv = sorted(self.cache.pages_of(t.tid + "#kv"))
         parent, prev_pages = None, 0
         for p in bounds:
-            budget = min(_kv_reserve_pages(t.cfg, self.batch, p),
+            budget = min(_kv_reserve_pages(t.cfg, self.batch, p,
+                                           t.kv_dtype),
                          len(resv))
             payload = {"snap": snap,
                        "token": token if p == t.prompt_len else None}
@@ -907,6 +966,37 @@ class MultiTenantServer:
     def _stamp_ttft(self, t: Tenant, token: Any) -> None:
         jax.block_until_ready(token)
         t.ttft = time.time() - t.admitted_wall
+        self._record_page_scales(t)
+
+    def _record_page_scales(self, t: Tenant) -> None:
+        """Per-page dequant scales for a quantized tenant, recorded at
+        the TTFT stamp — the one point the serving loop already blocks
+        on a device value, so the host read adds no new sync.  The
+        modeled page table has no row map, so the live prefix rows fold
+        onto the tenant's reserved pages by an even split; each page
+        stores the max per-row scale it covers, a dequant error bound
+        readable from the page table without touching the HBM rows."""
+        if t.kv_dtype == "native" or t.caches is None or t.pf_pos <= 0:
+            return
+        pages = sorted(self.cache.pages_of(t.tid + "#kv"))
+        if not pages:
+            return
+        leaves = [np.asarray(x) for path, x in
+                  jax.tree_util.tree_flatten_with_path(t.caches)[0]
+                  if any(str(getattr(k, "key", "")).endswith("_scale")
+                         for k in path)]
+        if not leaves:
+            return
+        live, n = t.pf_pos, len(pages)
+        # fold every scale leaf to one max per live row: time axis is
+        # ndim-3 for both per-group 4D and stacked 5D scale buffers
+        rows = np.stack([
+            np.moveaxis(leaf, leaf.ndim - 3, 0)[:live].reshape(live, -1)
+            .max(axis=1) for leaf in leaves]).max(axis=0)
+        for j, p in enumerate(pages):
+            lo = j * live // n
+            hi = max(lo + 1, (j + 1) * live // n)
+            self.cache.set_page_scale(p, float(rows[lo:hi].max()))
 
     def _prefill_whole(self, t: Tenant, now: float) -> None:
         """Sequential-admission baseline (and the serial reference
@@ -999,7 +1089,11 @@ class MultiTenantServer:
                     len(group) >= 2
                     and all(g.tid in dec_plans for g in group)
                     and all(dec_plans[g.tid] == (plan, k) for g in group)
-                    and len({g.index for g in group}) == 1)
+                    and len({g.index for g in group}) == 1
+                    # MoE/SSM decode plans lower to None: the plan no
+                    # longer discriminates KV precision, but stacked
+                    # cache pytrees must share one structure
+                    and len({g.kv_dtype for g in group}) == 1)
                 if bucketable:
                     work.append(("bucket", group, plan, k))
                     seen.update(g.tid for g in group)
@@ -1317,6 +1411,7 @@ class MultiTenantServer:
                         "departed": t.departed,
                         "kv_wanted": t.kv_wanted,
                         "kv_reserved": t.kv_reserved,
+                        "kv_dtype": t.kv_dtype,
                         "prefix_hit": t.prefix_hit,
                         "prefill_computed": t.pf_computed,
                         # full decoded history [B, total_steps], fetched
@@ -1389,7 +1484,7 @@ class FleetServer:
                  arrivals: Optional[PoissonArrivals] = None,
                  prefill_chunk: int = 2 * LANE, steps_per_s: float = 1.0,
                  qos_targets: Optional[Dict[str, float]] = None,
-                 prefix_dedup: bool = False):
+                 prefix_dedup: bool = False, kv_dtype: str = "native"):
         from repro.launch.mesh import make_serving_mesh, replica_submeshes
         if mesh is None:
             mesh = make_serving_mesh(n_replicas, tp=tp)
@@ -1412,7 +1507,8 @@ class FleetServer:
                               qos_targets=dict(qos_targets or {}),
                               device=subs[r], replica=f"r{r}",
                               control=self.registry.get(f"r{r}"),
-                              prefix_dedup=prefix_dedup)
+                              prefix_dedup=prefix_dedup,
+                              kv_dtype=kv_dtype)
             for r in range(self.n_replicas)]
         self._clock = 0               # lockstep with every replica clock
         self._n_admitted = 0          # global admission index -> seeds
@@ -1464,8 +1560,14 @@ class FleetServer:
         prompt = _prompt_tokens(spec, 0, cfg, srv0.batch)
         cands = _prefix_candidates(prompt, spec.prompt_len,
                                    srv0._chunk_align(cfg))
+        # probe under the key a fixed-precision replica registers with;
+        # "auto" probes the native rung (its common admission outcome —
+        # a mismatch only costs affinity, never correctness)
         return [srv.control.prefix.match_len(
-                    cfg.name, f"ps{spec.param_seed}", cands)
+                    cfg.name,
+                    _params_key(spec, srv.kv_dtype
+                                if srv.kv_dtype != "auto" else "native"),
+                    cands)
                 for srv in self.replicas]
 
     def _route(self, spec: TenantSpec, due_wall: Optional[float]) -> int:
@@ -1597,6 +1699,10 @@ def main() -> None:
     ap.add_argument("--admission", choices=["interleaved", "sequential"],
                     default="interleaved")
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--kv-dtype", default="native",
+                    choices=list(KV_PRECISION_LADDER) + ["auto"],
+                    help="KV cache storage precision (auto: downgrade "
+                         "per admission when the pool is tight)")
     ap.add_argument("--devices", type=int, default=0,
                     help="fleet mode: split the host into N XLA devices "
                          "and serve over an (N, 1) replica mesh")
@@ -1613,7 +1719,7 @@ def main() -> None:
         fleet = FleetServer(n_replicas=args.devices, arch_ids=args.archs,
                             pages_per_replica=args.pages,
                             epoch_len=args.epoch_len, max_len=args.max_len,
-                            arrivals=arrivals)
+                            arrivals=arrivals, kv_dtype=args.kv_dtype)
         out = fleet.run(args.steps)
         for rep in out["replicas"]:
             print(f"[fleet] {rep['replica']}: {rep['tokens_served']} tokens, "
@@ -1630,7 +1736,8 @@ def main() -> None:
                             pipeline=not args.serial,
                             max_len=args.max_len,
                             arrivals=arrivals,
-                            admission=args.admission)
+                            admission=args.admission,
+                            kv_dtype=args.kv_dtype)
     out = srv.run(args.steps)
     for tid, info in out["tenants"].items():
         ttft = (f", TTFT {info['ttft_s'] * 1e3:.0f}ms "
@@ -1639,6 +1746,8 @@ def main() -> None:
         kv = ""
         if info["kv_wanted"]:
             kv = f", kv {info['kv_reserved']}/{info['kv_wanted']}p"
+            if info["kv_dtype"] != "native":
+                kv += f" @{info['kv_dtype']}"
             if info["kv_reserved"] < info["kv_wanted"]:
                 kv += " (degraded)"
         print(f"[serve] {tid}: {info['tokens']} tokens, "

@@ -98,14 +98,46 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
         k = apply_rope(k, positions, cfg.rope_theta)
         if kv_cache is not None:
             assert cache_index is not None
-            k = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k,
-                                                    cache_index, axis=1)
-            v = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v,
-                                                    cache_index, axis=1)
-            new_cache = {"k": k, "v": v}
-            if kv_len is not None and kv_len < k.shape[1]:
-                k = jax.lax.slice_in_dim(k, 0, kv_len, axis=1)
-                v = jax.lax.slice_in_dim(v, 0, kv_len, axis=1)
+            if "k_scale" in kv_cache:
+                # quantized cache (precision-for-residency): quantize
+                # the new rows at the dynamic-update-slice boundary —
+                # each row's scale depends only on that row, so chunked
+                # prefill and one-shot prefill write identical caches —
+                # and dequantize the read AFTER the kv_len slice, so
+                # only the live prefix is expanded.
+                from repro.kernels import quant as kquant
+                kv_name = kquant.kv_dtype_of(kv_cache["k"].dtype)
+                kq, ks = kquant.quantize_rows(k, kv_name)
+                vq, vs = kquant.quantize_rows(v, kv_name)
+                buf = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(
+                        kv_cache["k"], kq, cache_index, axis=1),
+                    "v": jax.lax.dynamic_update_slice_in_dim(
+                        kv_cache["v"], vq, cache_index, axis=1),
+                    "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                        kv_cache["k_scale"], ks, cache_index, axis=1),
+                    "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                        kv_cache["v_scale"], vs, cache_index, axis=1),
+                }
+                new_cache = buf
+                kr, vr = buf["k"], buf["v"]
+                ksr, vsr = buf["k_scale"], buf["v_scale"]
+                if kv_len is not None and kv_len < kr.shape[1]:
+                    kr = jax.lax.slice_in_dim(kr, 0, kv_len, axis=1)
+                    vr = jax.lax.slice_in_dim(vr, 0, kv_len, axis=1)
+                    ksr = jax.lax.slice_in_dim(ksr, 0, kv_len, axis=1)
+                    vsr = jax.lax.slice_in_dim(vsr, 0, kv_len, axis=1)
+                k = kquant.dequantize_rows(kr, ksr, x.dtype)
+                v = kquant.dequantize_rows(vr, vsr, x.dtype)
+            else:
+                k = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k,
+                                                        cache_index, axis=1)
+                v = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v,
+                                                        cache_index, axis=1)
+                new_cache = {"k": k, "v": v}
+                if kv_len is not None and kv_len < k.shape[1]:
+                    k = jax.lax.slice_in_dim(k, 0, kv_len, axis=1)
+                    v = jax.lax.slice_in_dim(v, 0, kv_len, axis=1)
             L = k.shape[1]
             # causal bias over the cache prefix for queries at absolute
             # positions cache_index + [0, S) — [S, L]
@@ -120,7 +152,8 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
                 ctx = kops.attention(
                     q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                     v.transpose(0, 2, 1, 3), causal=True,
-                    block_q=attn_plan.block_q, block_kv=attn_plan.block_kv)
+                    block_q=attn_plan.block_q, block_kv=attn_plan.block_kv,
+                    kv_dtype=getattr(attn_plan, "kv_dtype", "native"))
                 ctx = ctx.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
                 return linear(params["wo"], ctx.astype(x.dtype)), None
             bias = _mask_bias(S, S, causal, cfg.sliding_window)
@@ -140,7 +173,20 @@ def mha(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
 
 
 def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
-                  dtype=None) -> Dict[str, jnp.ndarray]:
-    dt = dtype or cfg.jdtype
+                  dtype=None, kv_dtype: Optional[str] = None
+                  ) -> Dict[str, jnp.ndarray]:
+    """KV cache buffers.  ``kv_dtype`` None/"native" keeps the compute
+    dtype; "int8"/"fp8_e4m3" stores K/V quantized with per-row fp32
+    scales shaped [B, max_len, Hkv, 1] (4D like the caches, so the scan
+    carry / donation / prefix-seeding machinery treats scale leaves
+    exactly like cache leaves, time axis at ndim-3)."""
     shape = (batch, max_len, cfg.num_kv_heads, cfg.hd)
+    if kv_dtype is not None and kv_dtype != "native":
+        from repro.kernels import quant as kquant
+        qdt = kquant.kv_storage_dtype(kv_dtype)
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, qdt), "v": jnp.zeros(shape, qdt),
+                "k_scale": jnp.ones(sshape, jnp.float32),
+                "v_scale": jnp.ones(sshape, jnp.float32)}
+    dt = dtype or cfg.jdtype
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

@@ -249,9 +249,10 @@ def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
     return out
 
 
-def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                kv_dtype: Optional[str] = None):
     return jax.eval_shape(
-        lambda: init_caches(None, cfg, batch, max_len))
+        lambda: init_caches(None, cfg, batch, max_len, kv_dtype=kv_dtype))
 
 
 def param_specs_shapes(cfg: ArchConfig):

@@ -263,7 +263,8 @@ def encode(params: Params, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
 
 
 # -------------------------------------------------------------- decode --
-def init_caches(params: Params, cfg: ArchConfig, batch: int, max_len: int):
+def init_caches(params: Params, cfg: ArchConfig, batch: int, max_len: int,
+                kv_dtype: Optional[str] = None):
     """Per-group decode caches.
 
     Shallow stacks (<= ``_DECODE_UNROLL_MAX_GROUPS`` groups — every
@@ -273,17 +274,24 @@ def init_caches(params: Params, cfg: ArchConfig, batch: int, max_len: int):
     attention reads the buffer directly — no group-axis slicing, no
     re-stacking, so a donated epoch scan's per-step cache cost is
     O(tokens written) instead of O(cache bytes).  Deep stacks keep the
-    single stacked array the compact scan-over-layers decode consumes."""
+    single stacked array the compact scan-over-layers decode consumes.
+
+    ``kv_dtype`` ("int8" | "fp8_e4m3") builds quantized KV buffers with
+    per-row fp32 scale leaves (see :func:`repro.models.attention
+    .init_kv_cache`); SSM states are recurrent fp state, never
+    quantized.  None/"native" is byte-identical to the pre-quant cache
+    structure."""
     G = num_groups(cfg)
 
     def one(_):
         if cfg.family == "hybrid":
             return {"ssm": jax.vmap(lambda _: init_ssm_state(cfg, batch))(
                         jnp.arange(cfg.attn_every - 1)),
-                    "attn": init_kv_cache(cfg, batch, max_len)}
+                    "attn": init_kv_cache(cfg, batch, max_len,
+                                          kv_dtype=kv_dtype)}
         if cfg.family == "ssm":
             return init_ssm_state(cfg, batch)
-        return init_kv_cache(cfg, batch, max_len)
+        return init_kv_cache(cfg, batch, max_len, kv_dtype=kv_dtype)
 
     if G <= _DECODE_UNROLL_MAX_GROUPS:
         return tuple(one(None) for _ in range(G))
@@ -291,7 +299,8 @@ def init_caches(params: Params, cfg: ArchConfig, batch: int, max_len: int):
 
 
 def seed_caches_from_prefix(cfg: ArchConfig, batch: int, max_len: int,
-                            snapshot, prefix_len: int):
+                            snapshot, prefix_len: int,
+                            kv_dtype: Optional[str] = None):
     """Fresh decode caches pre-seeded with a shared KV prefix.
 
     ``snapshot`` is a cache pytree some co-tenant already filled through
@@ -307,11 +316,15 @@ def seed_caches_from_prefix(cfg: ArchConfig, batch: int, max_len: int,
     hybrid families the snapshot is only valid at its exact length:
     callers must pass ``prefix_len`` equal to the snapshot's token count
     and the recurrent state is adopted wholesale (hybrid still slices
-    its attention KV).  ``prefix_len`` must be a Python int (static
+    its attention KV).  ``kv_dtype`` must match the precision the
+    snapshot was filled at (the serving layer keys prefix entries by
+    it): quantized scale leaves are [B, L, Hkv, 1], so the same
+    time-axis (ndim-3) slice copies them row-for-row with the
+    quantized K/V.  ``prefix_len`` must be a Python int (static
     under jit).  encdec is unsupported — cross-attention caches are
     encoder-derived, not prompt-prefix-derived.
     """
-    fresh = init_caches(None, cfg, batch, max_len)
+    fresh = init_caches(None, cfg, batch, max_len, kv_dtype=kv_dtype)
 
     def kv_seed(dst, src):
         # KV leaves are [..., time, kv_heads, head_dim]: time is axis -3

@@ -1,0 +1,292 @@
+"""Precision-for-residency units (ISSUE 8): the shared quantization
+helpers, the kv_dtype plan axis, per-page scale bookkeeping, the
+dequant-fused Pallas kernels, and the admission-side precision math.
+
+Covers the PR acceptance contract:
+  * quantize_int8/dequantize_int8 round-trip within the symmetric-quant
+    bound (scale / 2 per element) including the zero / denormal edges,
+  * per-row KV quantization (quantize_rows) shapes, bounds, and the
+    all-zero-row scale guard; per-column weight quantization,
+  * elem_bytes fails loud on unknown dtypes (the old serve._elem_bytes
+    silently priced everything at 4 bytes),
+  * lower_selection threads kv_dtype into the plan (describe() tags it),
+  * SharedCache per-page scale table: set/get/clear-on-free, KeyError
+    on unallocated pages,
+  * flash_attention_quantized matches flash_attention run on the
+    dequantized K/V bit-for-bit; cache_matmul_quant / planned_ffn_quant
+    match jnp references on the dequantized operands,
+  * the roofline gate (benchmarks.roofline.check_quant_rooflines), and
+  * reservation math: int8 KV >= 1.8x effective pages on the attention
+    archs, choose_kv_dtype walks the ladder by free pages.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allocator import Selection
+from repro.core.cache import CacheConfig, SharedCache
+from repro.core.mct import MappingCandidate
+from repro.core.policy import KV_PRECISION_LADDER, choose_kv_dtype
+from repro.core.types import elem_bytes
+from repro.core.vmem import (KV_SCALE_BYTES, TileConfig, kv_row_bytes,
+                             lower_selection)
+from repro.kernels import quant
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_quantized)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------ quant helpers --
+def test_int8_round_trip_error_bound():
+    x = jax.random.normal(KEY, (64, 32), jnp.float32) * 3.0
+    q, scale = quant.quantize_int8(x)
+    assert q.dtype == jnp.int8
+    err = jnp.abs(quant.dequantize_int8(q, scale) - x)
+    assert float(err.max()) <= float(scale) / 2 + 1e-7
+
+
+def test_int8_zero_and_denormal_edges():
+    # all-zero input: the amax guard pins scale to 1.0, round trip exact
+    q, scale = quant.quantize_int8(jnp.zeros((8, 8)))
+    assert float(scale) == 1.0
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    # tiny (denormal-range) inputs survive the divide and stay bounded
+    x = jnp.full((4, 4), 1e-38, jnp.float32)
+    q, scale = quant.quantize_int8(x)
+    err = jnp.abs(quant.dequantize_int8(q, scale) - x)
+    assert float(err.max()) <= float(scale) / 2 + 1e-45
+    # extremes hit the clip rails exactly
+    q, scale = quant.quantize_int8(jnp.asarray([[-7.0, 7.0]]))
+    np.testing.assert_array_equal(np.asarray(q), [[-127, 127]])
+
+
+def test_quantize_rows_shapes_and_bound():
+    x = jax.random.normal(KEY, (2, 16, 4, 32), jnp.float32)
+    q, s = quant.quantize_rows(x, "int8")
+    assert q.shape == x.shape and q.dtype == jnp.int8
+    assert s.shape == x.shape[:-1] + (1,) and s.dtype == jnp.float32
+    err = jnp.abs(quant.dequantize_rows(q, s) - x)
+    assert float((err - s / 2).max()) <= 1e-6     # per-row bound
+    # an all-zero row gets the scale-1.0 guard; other rows unaffected
+    x = x.at[0, 3].set(0.0)
+    q, s = quant.quantize_rows(x, "int8")
+    np.testing.assert_array_equal(np.asarray(s[0, 3]), 1.0)
+    np.testing.assert_array_equal(np.asarray(q[0, 3]), 0)
+
+
+def test_quantize_rows_fp8():
+    x = jax.random.normal(KEY, (8, 32), jnp.float32)
+    q, s = quant.quantize_rows(x, "fp8_e4m3")
+    assert q.dtype == jnp.float8_e4m3fn
+    err = jnp.abs(quant.dequantize_rows(q, s) - x)
+    # e4m3 keeps ~2 mantissa-bit relative precision near the row amax
+    assert float(err.max()) <= float(s.max()) * 448.0 * 0.0625
+
+
+def test_quantize_cols_layout():
+    w = jax.random.normal(KEY, (32, 48), jnp.float32)
+    q, s = quant.quantize_cols(w, "int8")
+    assert q.shape == w.shape and s.shape == (1, 48)
+    err = jnp.abs(q.astype(jnp.float32) * s - w)
+    assert float((err - s / 2).max()) <= 1e-6
+
+
+def test_kv_dtype_helpers():
+    assert quant.KV_DTYPES == ("native", "fp8_e4m3", "int8")
+    assert not quant.is_quantized("native")
+    for name in ("int8", "fp8_e4m3"):
+        assert quant.is_quantized(name)
+        assert quant.kv_dtype_of(quant.kv_storage_dtype(name)) == name
+    assert quant.kv_qmax("int8") == 127.0
+    assert quant.kv_qmax("fp8_e4m3") == 448.0
+    with pytest.raises(ValueError):
+        quant.kv_dtype_of(jnp.float32)
+
+
+def test_compression_reexports_shared_quant():
+    from repro.distributed import compression
+    assert compression.quantize_int8 is quant.quantize_int8
+    assert compression.dequantize_int8 is quant.dequantize_int8
+
+
+def test_elem_bytes_fails_loud():
+    assert elem_bytes("float32") == 4
+    assert elem_bytes("bfloat16") == 2
+    assert elem_bytes("int8") == 1
+    assert elem_bytes("fp8_e4m3") == 1
+    with pytest.raises(ValueError):
+        elem_bytes("not-a-dtype")
+
+
+# ------------------------------------------------------ plan axis -----
+def _sel(kind: str = "LWM", p_need: int = 8) -> Selection:
+    cand = MappingCandidate(kind=kind, p_need=p_need, dram_bytes=0,
+                            flops=0, loops=(), cache_map=(),
+                            usage_limit_bytes=0)
+    return Selection(cand, p_need, 0.0)
+
+
+def test_lower_selection_threads_kv_dtype():
+    kw = dict(seq_block=128, d_model=512, d_ff=2048, dtype_bytes=4,
+              head_dim=64)
+    native = lower_selection(_sel(), 16, **kw)
+    assert native.kv_dtype == "native"
+    assert "+kv:" not in native.describe()
+    plan = lower_selection(_sel(), 16, kv_dtype="int8", **kw)
+    assert plan.kv_dtype == "int8" and plan.attn.kv_dtype == "int8"
+    assert "+kv:int8" in plan.describe()
+    # the kv_dtype axis is part of plan identity (bucketing key)
+    assert plan != native
+
+
+# ------------------------------------------------------ page scales ---
+def test_shared_cache_page_scale_table():
+    cache = SharedCache(CacheConfig())
+    pages = cache.alloc("t0#kv", 3)
+    with pytest.raises(KeyError):
+        cache.set_page_scale(pages[-1] + 999, 0.5)
+    for i, p in enumerate(pages):
+        cache.set_page_scale(p, 0.1 * (i + 1))
+    assert cache.page_scale(pages[1]) == pytest.approx(0.2)
+    assert cache.page_scales_of("t0#kv") == {
+        p: pytest.approx(0.1 * (i + 1)) for i, p in enumerate(pages)}
+    cache.free("t0#kv")
+    assert cache.page_scale(pages[0]) is None
+    assert cache.page_scales_of("t0#kv") == {}
+
+
+# ------------------------------------------------------ kernels -------
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+def test_flash_quantized_matches_flash_on_dequantized(kv_dtype):
+    """The dequant-fused kernel must equal the native kernel fed the
+    dequantized K/V — same f32 block math, only the HBM width differs."""
+    B, H, Hkv, S, hd = 1, 4, 2, 256, 32
+    kq, kk, kv_ = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, Hkv, S, hd), jnp.float32)
+    v = jax.random.normal(kv_, (B, Hkv, S, hd), jnp.float32)
+    kqz, ks = quant.quantize_rows(k, kv_dtype)
+    vqz, vs = quant.quantize_rows(v, kv_dtype)
+    out_q = flash_attention_quantized(q, kqz, vqz, ks[..., 0], vs[..., 0],
+                                      block_q=128, block_kv=128)
+    kd = quant.dequantize_rows(kqz, ks, q.dtype)
+    vd = quant.dequantize_rows(vqz, vs, q.dtype)
+    out_ref = flash_attention(q, kd, vd, block_q=128, block_kv=128)
+    np.testing.assert_array_equal(np.asarray(out_q), np.asarray(out_ref))
+
+
+def test_cache_matmul_quant_matches_reference():
+    from repro.kernels.cache_matmul import cache_matmul_quant
+    a = jax.random.normal(KEY, (64, 96), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 128), jnp.float32)
+    wq, ws = quant.quantize_cols(w, "int8")
+    tile = TileConfig(bm=32, bn=64, bk=32, vmem_bytes=0)
+    out = cache_matmul_quant(a, wq, ws, tile)
+    ref = a @ (wq.astype(jnp.float32) * ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_planned_matmul_quant_pads_ragged_shapes():
+    from repro.kernels import ops
+    a = jax.random.normal(KEY, (33, 70), jnp.float32)     # not tile-aligned
+    w = jax.random.normal(jax.random.PRNGKey(2), (70, 50), jnp.float32)
+    wq, ws = quant.quantize_cols(w, "int8")
+    tile = TileConfig(bm=32, bn=32, bk=32, vmem_bytes=0)
+    out = ops.planned_matmul_quant(a, wq, ws, tile)
+    ref = a @ (wq.astype(jnp.float32) * ws)
+    assert out.shape == (33, 50)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_planned_ffn_quant_matches_reference():
+    from repro.core.plan import FfnPlan
+    from repro.kernels import ops
+    d, ff = 64, 128
+    x = jax.random.normal(KEY, (32, d), jnp.float32)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    wg = jax.random.normal(ks[0], (d, ff), jnp.float32) * 0.1
+    wu = jax.random.normal(ks[1], (d, ff), jnp.float32) * 0.1
+    wd = jax.random.normal(ks[2], (ff, d), jnp.float32) * 0.1
+    tile = TileConfig(bm=32, bn=32, bk=32, vmem_bytes=0)
+    plan = FfnPlan(fused=False, up_tile=tile, down_tile=tile)
+    qs = {n: quant.quantize_cols(w, "int8") for n, w in
+          [("g", wg), ("u", wu), ("d", wd)]}
+    out = ops.planned_ffn_quant(x, qs["g"][0], qs["g"][1], qs["u"][0],
+                                qs["u"][1], qs["d"][0], qs["d"][1], plan)
+    deq = {n: q.astype(jnp.float32) * s for n, (q, s) in qs.items()}
+    h = jax.nn.silu(x @ deq["g"]) * (x @ deq["u"])
+    ref = h @ deq["d"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ops_attention_kv_dtype_path():
+    """The planned attention entry quantizes K/V per row and routes to
+    the fused kernel — output must match the explicit
+    quantize/dequantize reference through the native kernel."""
+    from repro.kernels import ops
+    B, H, S, hd = 1, 2, 96, 32                    # ragged: pads to 128
+    kq, kk, kv_ = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, H, S, hd), jnp.float32)
+    v = jax.random.normal(kv_, (B, H, S, hd), jnp.float32)
+    out = ops.attention(q, k, v, kv_dtype="int8")
+    kz, ks = quant.quantize_rows(k, "int8")
+    vz, vs = quant.quantize_rows(v, "int8")
+    ref = ops.attention(q, quant.dequantize_rows(kz, ks, q.dtype),
+                        quant.dequantize_rows(vz, vs, q.dtype))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------ accounting ----
+def test_kv_row_bytes():
+    assert kv_row_bytes(4, 32, 4) == 2 * 4 * 32 * 4
+    assert kv_row_bytes(4, 32, 1, scaled=True) == \
+        2 * 4 * 32 + 2 * 4 * KV_SCALE_BYTES
+
+
+def test_roofline_gate_passes():
+    from benchmarks.roofline import (check_quant_rooflines,
+                                     quant_attention_roofline)
+    assert check_quant_rooflines(verbose=False) == 0
+    r = quant_attention_roofline()
+    assert r["ai_gain"] >= 1.8
+    assert r["fused_vs_materialized"] > 1.0
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "olmoe-1b-7b"])
+def test_kv_reserve_pages_precision_gain(arch):
+    from repro.launch.serve import _kv_reserve_pages
+    from repro.models.base import get_arch
+    cfg = get_arch(arch).reduced()
+    native = _kv_reserve_pages(cfg, 1, 1024)
+    int8 = _kv_reserve_pages(cfg, 1, 1024, "int8")
+    fp8 = _kv_reserve_pages(cfg, 1, 1024, "fp8_e4m3")
+    assert native / int8 >= 1.8                   # the acceptance floor
+    assert int8 <= fp8 <= native
+
+
+def test_kv_reserve_pages_ssm_precision_invariant():
+    """SSM state is not a KV cache: precision must not change its
+    reservation."""
+    from repro.launch.serve import _kv_reserve_pages
+    from repro.models.base import get_arch
+    cfg = get_arch("mamba2-370m").reduced()
+    assert _kv_reserve_pages(cfg, 1, 1024) == \
+        _kv_reserve_pages(cfg, 1, 1024, "int8")
+
+
+def test_choose_kv_dtype_ladder():
+    want = {"native": 64, "fp8_e4m3": 20, "int8": 18}
+    assert choose_kv_dtype(want, 100) == "native"
+    assert choose_kv_dtype(want, 63) == "fp8_e4m3"
+    assert choose_kv_dtype(want, 19) == "int8"
+    assert choose_kv_dtype(want, 0) == "int8"     # nothing fits: bottom
+    # rungs absent from want_pages are skipped
+    assert choose_kv_dtype({"int8": 18}, 100) == "int8"
+    assert KV_PRECISION_LADDER == ("native", "fp8_e4m3", "int8")

