@@ -639,6 +639,123 @@ def serve_quant_bench() -> dict:
     }
 
 
+def serve_host_bench() -> dict:
+    """Host-off-the-critical-path benchmark (the `host` BENCH_serve.json
+    entry): three resident decode tenants plus prompt arrivals, served
+    at epoch_len 8 / 4 / 2 with the batched Algorithm 1 planner and AOT
+    fused-program precompile on.  Measures, per epoch length, tokens/s,
+    arrival p95 TTFT, and the host sched wall vs the device dispatch
+    wall; gates (in _check_serve) on the host staying off the critical
+    path — sched wall < 30% of device wall, ZERO post-warmup program
+    compiles — and on the epoch-length sweep showing a p95 TTFT
+    reduction at a smaller epoch_len for <=5% tokens/s loss (the
+    pipelined scheduler's latency/throughput knob is usable because the
+    host no longer charges per-epoch overhead to the critical path)."""
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.launch import env
+    from repro.launch.serve import MultiTenantServer
+    from repro.sim.driver import TenantSpec
+
+    residents = ["olmoe-1b-7b", "mamba2-370m", "yi-9b"]
+
+    def specs():
+        # LANE-multiple prompts (512 = 4 chunks of the 128 grid): every
+        # chunk/kv window repeats across replays, so the warm replay
+        # covers every program the measured replays execute
+        return [TenantSpec("olmoe-1b-7b", arrive_at=2.0 + 2 * i,
+                           n_inferences=12, prompt_len=512)
+                for i in range(2)]
+
+    steps, reps = 24, 3
+    sweep_els = [8, 4, 2]
+    servers = {}
+    for el in sweep_els:
+        # batch=8: enough device work per decode step that the fixed
+        # per-epoch dispatch cost is measured against real epochs, not
+        # toy ones (the regime the sweep's 5% throughput band assumes)
+        srv = MultiTenantServer(residents, batch=8, max_len=2048,
+                                total_pages=512, epoch_len=el,
+                                tenants=specs(), aot_warmup=True)
+        srv.run(steps)            # compile warmup: same scenario, cold
+        srv.wait_aot()
+        servers[el] = srv
+    metrics = {el: {"tps": [], "ttft": [], "sched": [], "device": [],
+                    "compiles": 0, "overlap": True, "host": None}
+               for el in sweep_els}
+    for _ in range(reps):         # alternate: drift hits every el alike
+        for el, srv in servers.items():
+            srv.enqueue(specs())
+            out = srv.run(steps)
+            h = out["host"]
+            m = metrics[el]
+            m["tps"].append(out["tokens_per_s"])
+            m["ttft"].append(out["p95_ttft_s"])
+            m["sched"].append(h["sched_wall_s"])
+            m["device"].append(h["device_wall_s"])
+            m["compiles"] += sum(h["epoch_compiles"])
+            m["overlap"] &= all(s < d for s, d in
+                                zip(h["epoch_sched_walls"],
+                                    h["epoch_device_walls"]))
+            m["host"] = h
+    entry = {
+        "workload": {"residents": residents, "arrivals": 2,
+                     "prompt_len": 512, "decode_budget": 12, "batch": 8,
+                     "steps": steps, "pages": 512,
+                     "epoch_lens": sweep_els},
+        "epoch_sweep": {},
+    }
+    for el in sweep_els:
+        m = metrics[el]
+        sched = float(np.median(m["sched"]))
+        device = float(np.median(m["device"]))
+        rec = {
+            "tokens_per_s": round(float(np.median(m["tps"])), 1),
+            "p95_ttft_ms": round(float(np.median(m["ttft"])) * 1e3, 1),
+            "sched_wall_ms": round(sched * 1e3, 2),
+            "device_wall_ms": round(device * 1e3, 2),
+            "sched_frac": round(sched / max(device, 1e-9), 4),
+            "post_warmup_compiles": m["compiles"],
+            "sched_under_device_every_epoch": m["overlap"],
+        }
+        entry["epoch_sweep"][str(el)] = rec
+        emit(f"serve_host_k{el}", device * 1e6,
+             f"{rec['tokens_per_s']:.1f} tok/s | p95 TTFT "
+             f"{rec['p95_ttft_ms']:.0f}ms | sched "
+             f"{rec['sched_frac'] * 100:.1f}% of device wall",
+             extra={"tokens_per_s": rec["tokens_per_s"],
+                    "p95_ttft_ms": rec["p95_ttft_ms"],
+                    "sched_frac": rec["sched_frac"]})
+    base = entry["epoch_sweep"][str(sweep_els[0])]
+    h8 = metrics[sweep_els[0]]["host"]
+    # sweep pick: the smaller epoch length with the lowest p95 TTFT —
+    # the latency point the host-overlap work makes affordable
+    best_el = min(sweep_els[1:],
+                  key=lambda el: entry["epoch_sweep"][str(el)]["p95_ttft_ms"])
+    best = entry["epoch_sweep"][str(best_el)]
+    entry.update({
+        "env": env.describe(),
+        "sched_frac": base["sched_frac"],
+        "post_warmup_compiles": sum(m["compiles"]
+                                    for m in metrics.values()),
+        "batched_runs": h8["batched_runs"],
+        "oracle_runs": h8["oracle_runs"],
+        "aot": {"compiled": h8["aot_compiled"],
+                "failed": h8["aot_failed"],
+                "hits": h8["aot_hits"],
+                "fallback_calls": h8["fallback_calls"]},
+        "sweep_pick": {
+            "epoch_len": best_el,
+            "p95_ttft_ratio": round(
+                base["p95_ttft_ms"] / max(best["p95_ttft_ms"], 1e-9), 3),
+            "tokens_per_s_ratio": round(
+                best["tokens_per_s"] / max(base["tokens_per_s"], 1e-9), 3),
+        },
+    })
+    return entry
+
+
 def _check_serve(baseline: dict, fresh: dict) -> int:
     """CI gate mirroring the BENCH_nec gate: a >2x tokens/s regression
     of the pipelined loop — or of the mixed-workload continuous-batching
@@ -729,6 +846,40 @@ def _check_serve(baseline: dict, fresh: dict) -> int:
         if bqt and gqt < bqt / 2.0:
             failures.append(f"serve_quant: {gqt:.1f} tok/s (int8) is "
                             f"<0.5x the baseline {bqt:.1f} tok/s")
+    got_h = fresh.get("host", {})
+    if got_h:
+        sf = got_h.get("sched_frac", 1.0)
+        if sf >= 0.30:
+            failures.append(f"serve_host: sched wall is {sf * 100:.1f}% of "
+                            f"the device wall — host is on the critical "
+                            f"path (>=30%)")
+        nc = got_h.get("post_warmup_compiles", -1)
+        if nc != 0:
+            failures.append(f"serve_host: {nc} fused-program compiles "
+                            f"after warmup (steady state must be 0)")
+        if got_h.get("oracle_runs", 1) != 0:
+            failures.append(f"serve_host: {got_h.get('oracle_runs')} epoch "
+                            f"plans fell back to the per-tenant oracle "
+                            f"(batched Algorithm 1 should cover the "
+                            f"decode steady state)")
+        pick = got_h.get("sweep_pick", {})
+        tr = pick.get("p95_ttft_ratio", 0.0)
+        if tr <= 1.0:
+            failures.append(f"serve_host: epoch sweep shows no p95 TTFT "
+                            f"reduction at epoch_len="
+                            f"{pick.get('epoch_len')} ({tr:.2f}x)")
+        tpr = pick.get("tokens_per_s_ratio", 0.0)
+        if tpr < 0.95:
+            failures.append(f"serve_host: sweep point epoch_len="
+                            f"{pick.get('epoch_len')} costs "
+                            f"{(1 - tpr) * 100:.1f}% tokens/s (>5% loss)")
+        bht = baseline.get("host", {}).get("epoch_sweep", {}) \
+                      .get("8", {}).get("tokens_per_s", 0.0)
+        ght = got_h.get("epoch_sweep", {}).get("8", {}) \
+                   .get("tokens_per_s", 0.0)
+        if bht and ght and ght < bht / 2.0:
+            failures.append(f"serve_host: {ght:.1f} tok/s (epoch_len=8) is "
+                            f"<0.5x the baseline {bht:.1f} tok/s")
     for f in failures:
         print(f"[bench-check] FAIL {f}", file=sys.stderr)
     if not failures:
@@ -749,6 +900,13 @@ def _check_serve(baseline: dict, fresh: dict) -> int:
                 f"quant {got_q.get('effective_pages_gain', 0):.2f}x pages "
                 f"@ {got_q.get('tokens_per_s_ratio', 0):.2f}x tok/s, cos "
                 f"{got_q.get('accuracy', {}).get('min_cosine', 0):.5f}")
+        if got_h:
+            pick = got_h.get("sweep_pick", {})
+            parts.append(
+                f"host sched {got_h.get('sched_frac', 0) * 100:.1f}% of "
+                f"device, sweep k={pick.get('epoch_len')} "
+                f"{pick.get('p95_ttft_ratio', 0):.2f}x p95 TTFT @ "
+                f"{pick.get('tokens_per_s_ratio', 0):.2f}x tok/s")
         print(f"[bench-check] serve ok ({'; '.join(parts)})",
               file=sys.stderr)
     return 1 if failures else 0
@@ -759,6 +917,8 @@ def _write_serve_json(payload: dict) -> None:
     produce (the `fleet` entry during --smoke, the `pipelined`/`mixed`
     entries during --fleet) keep their committed values, so the file
     holds the union of both modes."""
+    from repro.launch import env
+    payload["env"] = env.describe_dict()
     if BENCH_SERVE_JSON.exists():
         try:
             prev = json.loads(BENCH_SERVE_JSON.read_text())
@@ -775,8 +935,9 @@ def _write_serve_json(payload: dict) -> None:
 
 def _write_json(wall_s: float, mode: str) -> None:
     from benchmarks.common import RESULTS
+    from repro.launch import env
     payload = {"schema": 1, "mode": mode, "wall_s": round(wall_s, 2),
-               "figures": dict(RESULTS)}
+               "env": env.describe_dict(), "figures": dict(RESULTS)}
     if BENCH_JSON.exists():
         try:
             prev = json.loads(BENCH_JSON.read_text())
@@ -929,6 +1090,29 @@ def main() -> None:
             _write_serve_json(serve_payload)
         else:
             print("[bench] quant check FAILED; baseline left untouched",
+                  file=sys.stderr)
+        sys.exit(rc)
+    if "--host" in args:
+        # host-off-the-critical-path entry (CI bench-smoke job, fourth
+        # step): gates on the committed BENCH_serve.json and the ISSUE-9
+        # floors (sched wall < 30% of device wall, zero post-warmup
+        # compiles, epoch sweep p95-TTFT-vs-throughput band)
+        t0 = time.time()
+        print("name,us_per_call,derived")
+        serve_payload = {"schema": 1, "host": serve_host_bench()}
+        wall_s = time.time() - t0
+        rc = 0
+        if budget_s and wall_s > budget_s:
+            print(f"[bench-check] FAIL wall {wall_s:.1f}s exceeds budget "
+                  f"{budget_s:.0f}s", file=sys.stderr)
+            rc = 1
+        if "--check" in args and BENCH_SERVE_JSON.exists():
+            rc |= _check_serve(json.loads(BENCH_SERVE_JSON.read_text()),
+                               serve_payload)
+        if rc == 0:
+            _write_serve_json(serve_payload)
+        else:
+            print("[bench] host check FAILED; baseline left untouched",
                   file=sys.stderr)
         sys.exit(rc)
     baseline = None

@@ -18,6 +18,8 @@ import dataclasses
 import enum
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 
 class Residency(enum.Enum):
     """Which operand stays resident in the shared-cache region across the
@@ -93,6 +95,28 @@ class MCT:
             if best.p_need < m.p_need <= pages_avail:
                 best = m
         return best
+
+    def _fit_tables(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Sorted p_need array + first-occurrence map for vectorized
+        best-fit.  ``lwms`` is sorted by (p_need, dram_bytes), so the first
+        occurrence of a tied p_need is exactly the candidate the scalar
+        ``best_fit`` loop keeps (strict ``<`` skips later ties)."""
+        tables = getattr(self, "_fit_cache", None)
+        if tables is None:
+            p = np.array([m.p_need for m in self.lwms], dtype=np.int64)
+            first = np.zeros(len(p), dtype=np.int64)
+            for i in range(1, len(p)):
+                first[i] = first[i - 1] if p[i] == p[i - 1] else i
+            tables = (p, first)
+            self._fit_cache = tables
+        return tables
+
+    def best_fit_batch(self, pages_avail: np.ndarray) -> List[MappingCandidate]:
+        """Vectorized ``best_fit`` over an array of page budgets."""
+        p, first = self._fit_tables()
+        idx = np.searchsorted(p, pages_avail, side="right") - 1
+        idx = np.maximum(idx, 0)
+        return [self.lwms[int(first[i])] for i in idx]
 
     def next_smaller(self, current: MappingCandidate) -> MappingCandidate:
         """On timeout, downgrade to the candidate with the next smaller

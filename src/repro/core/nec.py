@@ -30,7 +30,7 @@ preceding the faulting one.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -78,6 +78,23 @@ def layer_charge(read_bytes: int, write_bytes: int, access_bytes: int,
             access_bytes * max(1, group_size),
             max(0, access_bytes - read_bytes - write_bytes) // line_bytes,
             max(1, access_bytes // line_bytes))
+
+
+def project_traffic(charges: Iterable[Tuple[int, int, int, int, int]]
+                    ) -> Traffic:
+    """What-if accumulation of :func:`layer_charge` tuples into a fresh
+    :class:`Traffic` snapshot WITHOUT touching any ledger — the NEC's
+    pricing math used as an online simulator.  The predictive grant
+    lookahead prices alternative one-epoch-ahead assignments through this
+    and compares ``dram_total`` before committing real grants."""
+    out = Traffic()
+    for dram_read, dram_write, noc, hits, accesses in charges:
+        out.dram_read += dram_read
+        out.dram_write += dram_write
+        out.noc += noc
+        out.hits += hits
+        out.accesses += accesses
+    return out
 
 
 class TrafficLedger:

@@ -35,7 +35,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
 
 from repro.core.allocator import AHEAD_FRACTION, DynamicCacheAllocator, Selection
 from repro.core.mct import MCT, MappingCandidate
@@ -136,6 +138,95 @@ def charge_and_plan(task, cand: MappingCandidate,
     return plan
 
 
+def price_layer_batch(items: Sequence[Tuple[object, MappingCandidate, int]],
+                      cache: Optional[Dict] = None
+                      ) -> List[Tuple[ExecutionPlan, Tuple[int, ...]]]:
+    """Pure batched layer pricing: evaluate every (task, candidate,
+    layer_idx) triple in one pass — memo lookups first, then ONE
+    vectorized :func:`repro.core.nec.layer_charge` over the miss set.
+    Returns (ExecutionPlan, charge-tuple) per item and mutates nothing but
+    the memo, so the caller controls exactly when each charge lands on the
+    ledger (the batched epoch planner charges at the oracle's on-grant
+    points).  Bit-identical to scalar pricing: numpy int64 floor-division
+    matches Python ``//`` for the non-negative byte volumes here, and the
+    memo keys/values are exactly :func:`charge_and_plan`'s."""
+    if cache is None:
+        cache = {}
+    keys = [(task.model.graph.name, layer_idx, id(cand), task.group_size)
+            for task, cand, layer_idx in items]
+    miss = [i for i, k in enumerate(keys) if k not in cache]
+    if miss:
+        n = len(miss)
+        rd = np.empty(n, np.int64)
+        wr = np.empty(n, np.int64)
+        access = np.empty(n, np.int64)
+        group = np.empty(n, np.int64)
+        line = np.empty(n, np.int64)
+        for j, i in enumerate(miss):
+            task, cand, layer_idx = items[i]
+            rd[j], wr[j] = split_layer_traffic_at(task, cand, layer_idx)
+            access[j] = task.model.stream_bytes[layer_idx]
+            group[j] = task.group_size
+            line[j] = task.nec.config.line_bytes
+        noc = access * np.maximum(1, group)
+        hits = np.maximum(0, access - rd - wr) // line
+        accesses = np.maximum(1, access // line)
+        for j, i in enumerate(miss):
+            task, cand, _ = items[i]
+            compute_s = cand.flops / (task.model.mcfg.compute_flops
+                                      * task.group_size)
+            plan = ExecutionPlan(compute_s, int(rd[j]), int(wr[j]),
+                                 int(access[j]))
+            charge = (int(rd[j]), int(wr[j]), int(noc[j]), int(hits[j]),
+                      int(accesses[j]))
+            cache[keys[i]] = (plan, charge)
+    return [cache[k] for k in keys]
+
+
+def charge_and_plan_batch(items: Sequence[Tuple[object, MappingCandidate]],
+                          cache: Optional[Dict] = None) -> List[ExecutionPlan]:
+    """Batched :func:`charge_and_plan`: price every (task, candidate) pair
+    at the task's current layer cursor in one numpy pass, then charge each
+    task's ledger in the given order.  Bit-identical to sequential
+    ``charge_and_plan`` calls — same memo, same charge tuples, and
+    per-tenant ledger counters are independent across tasks."""
+    priced = price_layer_batch(
+        [(task, cand, task.layer_idx) for task, cand in items], cache)
+    plans: List[ExecutionPlan] = []
+    for (task, _), (plan, charge) in zip(items, priced):
+        task.charge(charge)
+        plans.append(plan)
+    return plans
+
+
+def split_layer_traffic_at(task, cand: MappingCandidate,
+                           layer_idx: int) -> Tuple[int, int]:
+    """:func:`split_layer_traffic` for an explicit layer index — what-if
+    pricing prices layers the task cursor is not currently on."""
+    layer: LayerSpec = task.model.graph.layers[layer_idx]
+    if cand.kind == "LBM":
+        blk = task.model.mapping.block_of(layer_idx)
+        wr = layer.output_bytes if layer_idx == blk[1] - 1 else 0
+    else:
+        wr = layer.output_bytes
+    rd = max(0, cand.dram_bytes - wr)
+    return rd, wr
+
+
+def project_epoch_dram(task, cands: Sequence[MappingCandidate],
+                       k: int = 1) -> int:
+    """What-if DRAM bytes for one epoch (``k`` executions of the task's
+    graph) under a per-layer candidate assignment — pure: prices through
+    the same :func:`split_layer_traffic` math as the ledger path but
+    mutates nothing.  Used by the predictive grant lookahead to compare
+    assignments one epoch ahead."""
+    total = 0
+    for i, cand in enumerate(cands):
+        rd, wr = split_layer_traffic_at(task, cand, i)
+        total += rd + wr
+    return total * max(1, k)
+
+
 # ---------------------------------------------------------------------------
 # Precision-for-residency: the KV-precision ladder, highest fidelity
 # first.  Admission walks it downward until a tenant's FULL KV
@@ -190,6 +281,21 @@ class CamdnPolicy:
             layer_t_est=task.model.layer_t_est[i],
             block_t_est=task.model.block_t_est[block],
             is_head_of_block=task.model.mapping.is_head_of_block(i))
+
+    def select_batch(self, tasks: Sequence, now: float) -> List[Selection]:
+        """Batched :meth:`select` over many tasks at their current layer
+        cursors — one numpy pass through the allocator's profile arrays.
+        Pure; bit-identical to per-task ``select`` calls."""
+        ids, mcts, lts, bts, heads = [], [], [], [], []
+        for task in tasks:
+            i = task.layer_idx
+            block = task.model.mapping.block_of(i)
+            ids.append(task.id)
+            mcts.append(task.mct())
+            lts.append(task.model.layer_t_est[i])
+            bts.append(task.model.block_t_est[block])
+            heads.append(task.model.mapping.is_head_of_block(i))
+        return self.allocator.select_batch(ids, mcts, now, lts, bts, heads)
 
     def on_timeout(self, task, now: float) -> Selection:
         cand = self.allocator.on_timeout_downgrade(

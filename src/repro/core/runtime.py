@@ -159,6 +159,19 @@ class TenantTask:
             self.cpt.map_pages(granted, base_vcpn=base)
         return self.policy.on_grant(self, now)
 
+    def adopt_grant(self, selection: Selection, granted: List[int]) -> None:
+        """Batched-commit path (launch/serve.py): install a Selection that
+        ``select_batch`` precomputed, plus its granted pages — page/CPT
+        bookkeeping identical to ``begin_layer`` + ``start_execution``
+        minus the policy calls (the batched epoch planner prices through
+        :func:`repro.core.policy.price_layer_batch` and replays the
+        policy's grant side effects itself)."""
+        self.selection = selection
+        if granted:
+            base = len(self._held_pages)
+            self._held_pages.extend(granted)
+            self.cpt.map_pages(granted, base_vcpn=base)
+
     def charge(self, charge: Tuple[int, int, int, int, int]) -> None:
         """Charge one layer execution through the NEC ledger, folded by
         :attr:`charge_repeat`: the single point where epoch-granular

@@ -87,3 +87,18 @@ def describe() -> str:
             f"tcmalloc={'on' if tcmalloc_active() else 'off'} "
             f"compile_cache="
             f"{os.environ.get('JAX_COMPILATION_CACHE_DIR', 'off')}")
+
+
+def describe_dict() -> dict:
+    """Structured launcher-environment record, embedded into every BENCH
+    json entry so a number can always be traced back to the environment
+    that produced it.  Pure reads — never initializes the jax backend."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(rf"{_COUNT_FLAG}=(\d+)", flags)
+    return {
+        "host_devices": int(m.group(1)) if m else None,
+        "tcmalloc": tcmalloc_active(),
+        "compile_cache": os.environ.get("JAX_COMPILATION_CACHE_DIR"),
+        "xla_flags": flags or None,
+        "summary": describe(),
+    }

@@ -91,7 +91,9 @@ import argparse
 import contextlib
 import dataclasses
 import math
+import threading
 import time
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -100,13 +102,15 @@ import numpy as np
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.allocator import Selection
+from repro.core.allocator import AHEAD_FRACTION, INF, Selection
 from repro.core.cache import CacheConfig
 from repro.core.mapping import MapperConfig
 from repro.core.mct import MCT, ModelMapping
 from repro.core.plan import KernelPlan, lower_prefill_chunk
-from repro.core.policy import (KV_PRECISION_LADDER, ReplicaAllocators,
-                               ReplicaControl, choose_kv_dtype)
+from repro.core.policy import (KV_PRECISION_LADDER, CamdnPolicy,
+                               ReplicaAllocators, ReplicaControl,
+                               choose_kv_dtype, price_layer_batch,
+                               project_epoch_dram)
 from repro.core.runtime import TenantModel, TenantTask
 from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph, \
     ceil_div, elem_bytes
@@ -240,6 +244,115 @@ def _params_key(spec: TenantSpec, kv_dtype: str) -> str:
     return key
 
 
+class _LruCache:
+    """Bounded LRU map for the server's jit caches: under churning tenant
+    mixes the (plans, k, kv) key space grows without bound, so the
+    coldest program is evicted past ``capacity``.  Hit/miss counters
+    double as the server's compile counter — every miss on a jit cache
+    corresponds to one program build (and one XLA compile at its first
+    call).  Thread-safe: the AOT precompile thread populates these maps
+    concurrently with the dispatch loop."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._d: "OrderedDict" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, default=None):
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+                self.hits += 1
+                return self._d[key]
+            self.misses += 1
+            return default
+
+    def peek(self, key, default=None):
+        """Counter-free lookup (no hit/miss accounting, no LRU touch)."""
+        with self._lock:
+            return self._d.get(key, default)
+
+    def __setitem__(self, key, value) -> None:
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+                self.evictions += 1
+
+    def setdefault(self, key, value):
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+                return self._d[key]
+            self._d[key] = value
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+                self.evictions += 1
+            return value
+
+    def pop(self, key, default=None):
+        with self._lock:
+            return self._d.pop(key, default)
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._d
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+    def keys(self):
+        with self._lock:
+            return list(self._d.keys())
+
+
+def _aval_sig(args) -> Tuple:
+    """Structural signature of a pytree of arrays / ShapeDtypeStructs:
+    what the AOT precompiler keys its aval-specialized executables on.
+    Computed identically for abstract specs at compile time and concrete
+    device arrays at dispatch time."""
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    # .shape/.dtype attribute reads only — this runs per fused dispatch,
+    # and dtype promotion (jnp.result_type) or str() per leaf is measurable
+    # against a millisecond epoch
+    return (treedef, tuple((tuple(x.shape), x.dtype) for x in leaves))
+
+
+class _CompiledEntry:
+    """One fused-epoch program: the lazily-compiling ``jax.jit`` wrapper
+    plus any AOT-precompiled aval-specialized executables
+    (``jit(...).lower(specs).compile()``) the background warmup produced.
+    Dispatch prefers the matching precompiled executable (steady state:
+    zero compiles on the epoch boundary) and falls back to the jit
+    wrapper on any signature mismatch."""
+
+    __slots__ = ("fallback", "aot", "aot_hits", "fallback_calls")
+
+    def __init__(self, fallback):
+        self.fallback = fallback
+        self.aot: Dict[Tuple, Any] = {}
+        self.aot_hits = 0
+        self.fallback_calls = 0
+
+    def __call__(self, *args):
+        if self.aot:
+            compiled = self.aot.get(_aval_sig(args))
+            if compiled is not None:
+                try:
+                    out = compiled(*args)
+                    self.aot_hits += 1
+                    return out
+                except (TypeError, ValueError):
+                    pass   # aval/weak-type drift: recompile lazily below
+        self.fallback_calls += 1
+        return self.fallback(*args)
+
+
 @dataclasses.dataclass
 class Tenant:
     tid: str
@@ -267,6 +380,10 @@ class Tenant:
     chunks: List[int] = dataclasses.field(default_factory=list)
     budget_left: Optional[int] = None     # decode steps before departure
     departed: bool = False
+    # QoS target (seconds/token), resolved ONCE at admission by
+    # most-specific match over the server's qos_targets patterns —
+    # _slack must not re-run the pattern match every epoch
+    qos_target: Optional[float] = None
     admitted_wall: Optional[float] = None
     ttft: Optional[float] = None          # seconds admission -> 1st token
     run_steps: int = 0                    # decode steps this run() call
@@ -324,7 +441,10 @@ class MultiTenantServer:
                  device: Any = None, replica: str = "",
                  control: Optional[ReplicaControl] = None,
                  prefix_dedup: bool = False,
-                 kv_dtype: str = "native"):
+                 kv_dtype: str = "native",
+                 batch_sched: bool = True,
+                 lookahead: bool = False,
+                 aot_warmup: bool = False):
         assert admission in ("interleaved", "sequential"), admission
         assert kv_dtype in KV_PRECISION_LADDER + ("auto",), kv_dtype
         self.qos_targets = qos_targets or {}
@@ -335,6 +455,17 @@ class MultiTenantServer:
         # pages wins, so a starved arrival trades precision for
         # residency instead of degrading to a partial reservation
         self.kv_dtype = kv_dtype
+        # Host-off-the-critical-path knobs: batch_sched plans contiguous
+        # decode runs through the batched Algorithm 1 (bit-identical to
+        # the per-tenant oracle; False forces the oracle — the
+        # differential-testing switch); lookahead enables predictive
+        # grant adjustment against next-epoch contention (changes grants
+        # by design, so opt-in); aot_warmup precompiles the reachable
+        # fused epoch programs on a background thread at run start /
+        # admission (single-device servers only)
+        self.batch_sched = bool(batch_sched)
+        self.lookahead = bool(lookahead)
+        self.aot_warmup = bool(aot_warmup)
         self.epoch_len = max(1, int(epoch_len))
         self.pipeline = bool(pipeline)
         self.admission = admission
@@ -386,12 +517,36 @@ class MultiTenantServer:
         # one fused per-epoch device call (_fused_epoch_fn); jitted per
         # distinct (work-item structure, plans, k, kv) combination
         self._epoch_cores: Dict[str, Any] = {}
-        self._batched_cores: Dict[str, Any] = {}
+        # bounded LRU jit caches: under churning tenant mixes the
+        # (plans, k, kv) key space is unbounded, and each entry pins an
+        # XLA executable — the coldest programs are evicted.  Capacities
+        # comfortably cover the steady-state working set (asserted by
+        # tests/test_host_overlap.py: the smoke workload's hit rate is
+        # unchanged vs unbounded maps).
+        self._batched_cores = _LruCache(capacity=8)
+        self._fused_jits = _LruCache(capacity=64)
+        self._prefill_jits = _LruCache(capacity=16)
         self._prefill_cores: Dict[str, Any] = {}
-        self._fused_jits: Dict[Tuple, Any] = {}
-        self._prefill_jits: Dict[Tuple, Any] = {}
         # (arch, kv_dtype) -> prefix cache seeder
         self._seed_jits: Dict[Tuple[str, str], Any] = {}
+        # ---- host-path instrumentation ------------------------------
+        # per-epoch host scheduling wall vs dispatch wall (donation
+        # backpressure makes the dispatch wall track device time in
+        # steady state), plus per-epoch compile misses — the numbers the
+        # --host benchmark gates on
+        self._sched_walls: List[float] = []
+        self._device_walls: List[float] = []
+        self._admit_walls: List[float] = []
+        self._admit_wall = 0.0
+        self._epoch_compiles: List[int] = []
+        self._lookahead_adjusted = 0
+        self._batched_runs = 0
+        self._oracle_runs = 0
+        # ---- AOT plan-bucket precompile -----------------------------
+        self._aot_threads: List[threading.Thread] = []
+        self._aot_compiled = 0
+        self._aot_failed = 0
+        self._run_steps = 0
         # persistent tenant-stacked caches per bucketed arch group: the
         # stacked buffer stays stacked (and donated) across epochs while
         # the bucket holds, instead of an O(cache bytes) restack/slice
@@ -536,6 +691,10 @@ class MultiTenantServer:
         t.budget_left = spec.n_inferences
         if spec.qos_ms is not None:
             self.qos_targets[tid] = spec.qos_ms * 1e-3
+        # QoS target pinned ONCE at admission (most-specific pattern
+        # match) — _slack reads the resolved value every epoch instead
+        # of re-running the match per tenant per epoch
+        t.qos_target = self._resolve_qos(tid)
         hit = None
         if spec.prompt_len > 0:
             # the KV cache must hold the prompt plus every budgeted
@@ -613,6 +772,11 @@ class MultiTenantServer:
             tok = hit.payload["token"]
             self._finish_prefill(t, tok)
             self._stamp_ttft(t, tok)
+        if self.aot_warmup and self._run_steps > 0:
+            # mid-run arrival: extend the AOT universe with the new
+            # tenant's (plans, k, kv) trajectory while its prompt is
+            # still prefilling
+            self.warm_aot(self._run_steps)
         return t
 
     def _dedup_eligible(self, spec: TenantSpec, cfg: ArchConfig) -> bool:
@@ -727,7 +891,11 @@ class MultiTenantServer:
                 return
         while self._queue and self._due(self._queue[0]):
             spec, due_wall, _ = self._queue.pop(0)
+            # admission materializes params/caches — onboarding cost, not
+            # per-epoch scheduling; timed apart so sched_wall stays honest
+            a0 = time.perf_counter()
             self._admit_spec(spec, due_wall)
+            self._admit_wall += time.perf_counter() - a0
 
     def _depart(self, t: Tenant) -> None:
         """Dynamic tenancy, serving side: the tenant leaves, reclaiming
@@ -1039,7 +1207,247 @@ class MultiTenantServer:
         return (not t.departed and t.token is not None
                 and self._remaining(t, steps) > 0)
 
+    def _epoch_k(self, t: Tenant, steps: int) -> int:
+        """Decode window for this tenant's next epoch.  Epochs never
+        straddle a KV-window boundary: every step of the epoch shares
+        one static kv_len, computed from THIS tenant's index (tenants
+        admit at different times with different prompt lengths)."""
+        k = min(self.epoch_len, self._remaining(t, steps),
+                LANE - (t.index % LANE))
+        assert t.index + k <= self.max_len, \
+            f"{t.tid}: decode past max_len {self.max_len}"
+        return k
+
+    # --------------------------------------- batched Algorithm 1 --------
+    def _plan_decode_run(self, run: List[Tenant], now: float, steps: int,
+                         dec_plans: Dict[str, Tuple]) -> bool:
+        """Batched Algorithm 1 over a contiguous run of decode tenants:
+        simulate EVERY tenant's whole-graph grant sequence upfront (one
+        ``select_batch`` numpy pass per layer depth, pure), price every
+        layer in one vectorized NEC pass, then commit tenant-major —
+        replaying the per-tenant oracle's exact order of grants, charges,
+        and profile updates, so the Selections and Traffic counters are
+        bit-identical to ``_schedule_epoch`` per tenant.
+
+        The simulation is exact because at epoch-plan time the allocator
+        is quiescent (every profile's p_alloc == p_next, checked below):
+        ``pred_avail_pages`` degenerates to the pool's free count for any
+        horizon, each tenant's own intra-block profile churn is excluded
+        from its own predictions, and a finished tenant's final profile
+        update restores delta-zero before the next tenant selects — so
+        every oracle select would have seen exactly the free count the
+        batch sees.  Any precondition miss (non-CaMDN policy, carried-over
+        pages, a grant the oracle would have had to timeout-downgrade)
+        returns False with NOTHING mutated; the caller falls back to the
+        oracle."""
+        if not isinstance(self.policy, CamdnPolicy):
+            return False
+        alloc = self.alloc
+        if not alloc.quiescent():
+            return False
+        tasks: List[TenantTask] = []
+        for t in run:
+            task = t.task
+            if task.held_pages != 0 or alloc.has_enabled_lbm(task.id):
+                return False
+            if not (task.done or task.layer_idx == 0):
+                return False
+            tasks.append(task)
+        F = self.cache.free_pages
+        n_layers = [task.model.num_layers for task in tasks]
+        # --- pure simulation: all selections, layer by layer ----------
+        sels: List[List[Selection]] = [[] for _ in run]
+        flags = [False] * len(run)   # simulated per-tenant LBM flag
+        held = [0] * len(run)        # pages held at each select point
+        for l in range(max(n_layers)):
+            idxs = [i for i in range(len(run)) if l < n_layers[i]]
+            mcts = [tasks[i].model.mapping.mcts[l] for i in idxs]
+            for i, mct in zip(idxs, mcts):
+                if flags[i] and mct.lbm is None:
+                    # enabled-LBM select with no LBM candidate consults
+                    # the pool mid-block — only the oracle models that
+                    return False
+            blocks = [tasks[i].model.mapping.block_of(l) for i in idxs]
+            batch_sels = alloc.select_batch(
+                [tasks[i].id for i in idxs], mcts, now,
+                [tasks[i].model.layer_t_est[l] for i in idxs],
+                [tasks[i].model.block_t_est[b]
+                 for i, b in zip(idxs, blocks)],
+                [tasks[i].model.mapping.is_head_of_block(l) for i in idxs],
+                lbm_enabled=[flags[i] for i in idxs])
+            for i, blk, sel in zip(idxs, blocks, batch_sels):
+                if max(held[i], sel.p_cur) > F:
+                    # the oracle would enter its timeout-downgrade loop
+                    return False
+                sels[i].append(sel)
+                if sel.candidate.kind == "LBM" and l < blk[1] - 1:
+                    flags[i], held[i] = True, max(held[i], sel.p_cur)
+                else:
+                    flags[i], held[i] = False, 0
+        ks = [self._epoch_k(t, steps) for t in run]
+        if self.lookahead:
+            self._lookahead_adjust(run, ks, sels, F)
+        # --- one vectorized pricing pass over every (tenant, layer) ---
+        items = [(tasks[i], sels[i][l].candidate, l)
+                 for i in range(len(run)) for l in range(n_layers[i])]
+        priced = price_layer_batch(items, self.policy._price_cache)
+        # --- tenant-major commit: the oracle's exact order ------------
+        self._batched_runs += 1
+        pos = 0
+        for i, t in enumerate(run):
+            task = tasks[i]
+            if task.done:
+                task.reset_for_next_inference()
+            task.charge_repeat = ks[i]
+            sched: List[Tuple[Selection, int]] = []
+            try:
+                for l in range(n_layers[i]):
+                    sel = sels[i][l]
+                    task.selection = sel
+                    granted = self.cache.alloc(
+                        task.id, max(0, sel.p_cur - task.held_pages))
+                    assert granted is not None, \
+                        f"{task.id}: batched grant infeasible at layer {l}"
+                    task.adopt_grant(sel, granted)
+                    cand = sel.candidate
+                    # CamdnPolicy.on_grant's LBM side effect
+                    if (cand.kind == "LBM"
+                            and not alloc.has_enabled_lbm(task.id)):
+                        alloc.set_lbm(task.id, True)
+                        task.lbm_block = task.model.mapping.block_of(l)
+                    task.charge(priced[pos + l][1])
+                    sched.append((task.selection, task.held_pages))
+                    t.choices.append(f"{cand.kind}:{task.held_pages}p")
+                    task.end_layer(now)
+            finally:
+                task.charge_repeat = 1
+            pos += n_layers[i]
+            plan = self._lower_plan(t, sched)
+            t.plans.append(plan)
+            dec_plans[t.tid] = (self._dec_plan(t, plan), ks[i])
+        return True
+
+    def _simulate_block_sels(self, task: TenantTask, now: float,
+                             budget: int) -> Optional[List[Selection]]:
+        """Pure what-if Algorithm 1 walk of one task's whole graph under
+        a FIXED page budget: the grant sequence the task would receive if
+        predicted-available pages were pinned at ``budget`` throughout.
+        Returns None when some layer cannot fit even its smallest
+        candidate (the oracle would starve-stream it).  Shared by the
+        predictive lookahead (budget = next epoch's projected pool) and
+        the AOT key predictor (budget = current free pool)."""
+        sels: List[Selection] = []
+        flag, held = False, 0
+        mapping = task.model.mapping
+        for l in range(task.model.num_layers):
+            mct = mapping.mcts[l]
+            blk = mapping.block_of(l)
+            if flag and mct.lbm is None:
+                return None   # same bail as the batched planner
+            if flag:
+                sel = Selection(mct.lbm, mct.lbm.p_need, INF)
+            elif (mapping.is_head_of_block(l) and mct.lbm is not None
+                    and mct.lbm.p_need < budget):
+                sel = Selection(
+                    mct.lbm, mct.lbm.p_need,
+                    now + task.model.block_t_est[blk] * AHEAD_FRACTION)
+            else:
+                m = mct.best_fit(budget)
+                sel = Selection(
+                    m, m.p_need,
+                    now + task.model.layer_t_est[l] * AHEAD_FRACTION)
+            if max(held, sel.p_cur) > budget:
+                return None
+            sels.append(sel)
+            if sel.candidate.kind == "LBM" and l < blk[1] - 1:
+                flag, held = True, max(held, sel.p_cur)
+            else:
+                flag, held = False, 0
+        return sels
+
+    # ------------------------------------ predictive grant lookahead ----
+    def _upcoming_free_delta(self) -> int:
+        """Projected page-pool delta over the NEXT epoch from events that
+        are known one epoch early in the logical clock: queued arrivals
+        falling due (their KV reservation claims pages), tenants whose
+        decode budget expires within the epoch (reservation + grant pages
+        free), and prompts completing prefill (their decode stream starts
+        claiming grant pages)."""
+        delta = 0
+        horizon = self._clock + self.epoch_len
+        for spec, _, step in self._queue:
+            if step > horizon:
+                break
+            if spec.prompt_len > 0:
+                aid = (spec.model if isinstance(spec.model, str)
+                       else spec.model.name)
+                kv = self.kv_dtype if self.kv_dtype != "auto" else "native"
+                delta -= _kv_reserve_pages(get_arch(aid).reduced(),
+                                           self.batch, spec.prompt_len, kv)
+        for t in self.tenants:
+            if t.departed:
+                continue
+            if (t.budget_left is not None
+                    and 0 < t.budget_left <= self.epoch_len):
+                delta += self.cache.allocated_pages(t.tid + "#kv")
+                delta += t.task.held_pages
+            if t.prefilling and t.prompt_len - t.pf_pos <= self.prefill_block:
+                delta -= min(m.p_need
+                             for m in t.task.model.mapping.mcts[0].lwms)
+        return delta
+
+    def _lookahead_adjust(self, run: List[Tenant], ks: List[int],
+                          sels: List[List[Selection]], F: int) -> None:
+        """Predictive grant lookahead: epoch s+1's pool pressure is known
+        one epoch early (arrivals / departures / prefill completions are
+        deterministic in the logical clock).  For the tenants whose
+        grants would not survive the projected next-epoch pool, use the
+        NEC pricing as a what-if simulator: compare staying on the
+        aggressive grant now and being forced down next epoch (plus the
+        page re-grant thrash) against taking the stable grant for both
+        epochs, and keep whichever projects less DRAM traffic.  Mutates
+        only the not-yet-committed selection lists."""
+        delta = self._upcoming_free_delta()
+        if delta >= 0:
+            return
+        F_next = max(0, F + delta)
+        contested = []
+        for i in range(len(run)):
+            need = max((s.p_cur for s in sels[i]), default=0)
+            if need > F_next:
+                contested.append((need - F_next, i))
+        contested.sort(reverse=True)
+        for shortfall, i in contested[:4]:
+            task = run[i].task
+            stable = self._simulate_block_sels(task, 0.0, F_next)
+            if stable is None:
+                continue
+            cur_cands = [s.candidate for s in sels[i]]
+            stable_cands = [s.candidate for s in stable]
+            k = ks[i]
+            # stay: aggressive grant this epoch, forced down next epoch,
+            # plus the thrashed pages crossing DRAM twice (evict + refill)
+            stay = (project_epoch_dram(task, cur_cands, k)
+                    + project_epoch_dram(task, stable_cands, k)
+                    + shortfall * PAGE_BYTES * 2)
+            switch = 2 * project_epoch_dram(task, stable_cands, k)
+            if switch < stay:
+                sels[i] = stable
+                self._lookahead_adjusted += 1
+
     def _plan_epoch(self, now: float, steps: int) -> List[Tuple]:
+        """Timed wrapper around the epoch planner: the host `sched_wall`
+        half of the host/device overlap instrumentation."""
+        t0 = time.perf_counter()
+        a0 = self._admit_wall
+        try:
+            return self._plan_epoch_inner(now, steps)
+        finally:
+            adm = self._admit_wall - a0
+            self._sched_walls.append(time.perf_counter() - t0 - adm)
+            self._admit_walls.append(adm)
+
+    def _plan_epoch_inner(self, now: float, steps: int) -> List[Tuple]:
         """Host-side scheduling for one epoch: admit due arrivals,
         retire exhausted tenants, then select + charge every active
         tenant's work — a cache-aware prefill chunk for tenants still
@@ -1047,7 +1455,14 @@ class MultiTenantServer:
         (worst QoS slack first — first claim on the page pool).  Decode
         tenants whose (arch, plan, index, k) coincide bucket into single
         batched calls.  Pure host work: runs one epoch ahead of the
-        device."""
+        device.
+
+        Contiguous runs of decode tenants go through the BATCHED
+        Algorithm 1 (one numpy pass over the allocator's profile arrays
+        for the whole run) when its preconditions hold; anything else —
+        and any run failing them — falls back to the per-tenant oracle
+        path, preserving the exact sequencing of grants, downgrades, and
+        pool-pressure side effects."""
         while True:
             self._admit_due(steps)
             self._process_departures()
@@ -1059,19 +1474,34 @@ class MultiTenantServer:
                 order = sorted(active, key=lambda t: self._slack(t, now))
             pf_items: Dict[str, Tuple] = {}
             dec_plans: Dict[str, Tuple[Optional[KernelPlan], int]] = {}
-            for t in order:
+            i = 0
+            while i < len(order):
+                t = order[i]
                 if t.prefilling:
                     pf_items[t.tid] = self._plan_prefill_chunk(t, now)
-                elif self._decodable(t, steps):
-                    # epochs never straddle a KV-window boundary: every
-                    # step of the epoch shares one static kv_len,
-                    # computed from THIS tenant's index (tenants admit
-                    # at different times with different prompt lengths)
-                    k = min(self.epoch_len, self._remaining(t, steps),
-                            LANE - (t.index % LANE))
-                    assert t.index + k <= self.max_len, \
-                        f"{t.tid}: decode past max_len {self.max_len}"
-                    dec_plans[t.tid] = (self._schedule_epoch(t, now, k), k)
+                    i += 1
+                    continue
+                if not self._decodable(t, steps):
+                    i += 1
+                    continue
+                # maximal contiguous run of decode tenants: prefill
+                # planning between runs mutates pool state, so runs
+                # never span a prefill tenant
+                j = i
+                run: List[Tenant] = []
+                while (j < len(order) and not order[j].prefilling
+                       and self._decodable(order[j], steps)):
+                    run.append(order[j])
+                    j += 1
+                if not (self.batch_sched
+                        and self._plan_decode_run(run, now, steps,
+                                                  dec_plans)):
+                    self._oracle_runs += 1
+                    for g in run:
+                        k = self._epoch_k(g, steps)
+                        dec_plans[g.tid] = (self._schedule_epoch(g, now, k),
+                                            k)
+                i = j
             work: List[Tuple] = []
             seen = set()
             for t in self.tenants:
@@ -1139,38 +1569,30 @@ class MultiTenantServer:
         t0 = item[1][0] if item[0] == "bucket" else item[1]
         return self._kv_len(t0.index + item[3])
 
-    def _fused_epoch_fn(self, work: List[Tuple]):
-        """One jitted device program for the epoch's DECODE work: every
-        decode item (single-tenant epoch scan or vmapped bucket) becomes
-        an independent subgraph of a single XLA computation, so one
-        dispatch replaces n_tenants calls and the CPU/TPU runtime is
-        free to overlap the independent tenant subgraphs.  Jitted per
-        distinct (item structure, plans, k, kv) key and cached — in
-        steady state the grants repeat and every epoch is a cache hit.
-        (Prefill chunks deliberately dispatch as their own per-(arch,
-        chunk, kv) jits right before this call: folding their
-        run-to-run-varying shapes into the fused program would recompile
-        the whole epoch on every chunk resize, whereas standalone chunk
-        programs are cached across epochs AND across same-arch
-        arrivals.)"""
-        key = tuple(
+    def _fused_key(self, work: List[Tuple]) -> Tuple:
+        """The fused-program cache key for an epoch's decode work: one
+        (kind, arch, plan, k, kv) tuple per item.  Everything the device
+        program depends on and nothing tenant-specific — the AOT warmer
+        predicts these keys before their epochs exist."""
+        return tuple(
             (item[0], (item[1][0].cfg.name if item[0] == "bucket"
                        else item[1].cfg.name), item[2], item[3],
              self._item_kv(item))
             for item in work)
-        fn = self._fused_jits.get(key)
-        if fn is not None:
-            return fn
+
+    def _build_fused_jit(self, key: Tuple):
+        """Build the fused epoch program for a work key — from the key
+        ALONE (no live work items), so the AOT precompiler can build
+        programs for predicted keys ahead of their first epoch."""
         cores = []
-        for item in work:
-            kind, target, plan, k = item
+        for kind, name, plan, k, kv in key:
             if kind == "bucket":
                 core = self._batched_cores.setdefault(
-                    target[0].cfg.name,
-                    M.make_decode_epoch_batched(target[0].cfg))
+                    name, M.make_decode_epoch_batched(
+                        self._groups[name][0].cfg))
             else:
-                core = self._epoch_cores[target.cfg.name]
-            cores.append((core, plan, k, self._item_kv(item)))
+                core = self._epoch_cores[name]
+            cores.append((core, plan, k, kv))
 
         def fused(params_list, caches_list, token_list, index_list,
                   enc_list):
@@ -1184,9 +1606,176 @@ class MultiTenantServer:
                 caches_out.append(nc)
             return toks_out, caches_out
 
-        fn = jax.jit(fused, donate_argnums=(1,))
-        self._fused_jits[key] = fn
-        return fn
+        return jax.jit(fused, donate_argnums=(1,))
+
+    def _fused_epoch_fn(self, work: List[Tuple]) -> _CompiledEntry:
+        """One jitted device program for the epoch's DECODE work: every
+        decode item (single-tenant epoch scan or vmapped bucket) becomes
+        an independent subgraph of a single XLA computation, so one
+        dispatch replaces n_tenants calls and the CPU/TPU runtime is
+        free to overlap the independent tenant subgraphs.  Jitted per
+        distinct (item structure, plans, k, kv) key and cached — in
+        steady state the grants repeat and every epoch is a cache hit,
+        and an AOT-warmed entry dispatches a precompiled executable.
+        (Prefill chunks deliberately dispatch as their own per-(arch,
+        chunk, kv) jits right before this call: folding their
+        run-to-run-varying shapes into the fused program would recompile
+        the whole epoch on every chunk resize, whereas standalone chunk
+        programs are cached across epochs AND across same-arch
+        arrivals.)"""
+        key = self._fused_key(work)
+        entry = self._fused_jits.get(key)
+        if entry is None:
+            entry = _CompiledEntry(self._build_fused_jit(key))
+            self._fused_jits[key] = entry
+        return entry
+
+    def compile_misses(self) -> int:
+        """Total fused + prefill program builds so far — each miss is one
+        program build and one XLA compile at its first call.  The --host
+        benchmark gates on the post-warmup delta being zero."""
+        return self._fused_jits.misses + self._prefill_jits.misses
+
+    # ----------------------------------- AOT plan-bucket precompile -----
+    def _enumerate_epoch_keys(self, steps: int) -> List[Tuple]:
+        """Predicted fused-program keys for this run: walk each tenant's
+        (k, kv) decode trajectory from its current position (prefill
+        epochs delay the start), predict its grant plan under the current
+        free pool via the pure Algorithm 1 walk, and compose per-epoch
+        work keys in tenant order with the planner's bucketing predicate.
+        A prediction miss costs one wasted background compile; a hit
+        means the epoch boundary finds its program ready."""
+        preds: Dict[str, Tuple] = {}
+        for t in self.tenants:
+            if t.departed:
+                continue
+            sims = self._simulate_block_sels(t.task, 0.0,
+                                             self.cache.free_pages)
+            if sims is None:
+                continue
+            plan = self._dec_plan(
+                t, self._lower_plan(t, [(s, s.p_cur) for s in sims]))
+            start, idx = 0, t.index
+            if t.prompt is not None and t.token is None:
+                start = -(-(t.prompt_len - t.pf_pos) // self.prefill_block)
+                idx = t.prompt_len
+            rem = t.budget_left if t.budget_left is not None else steps
+            traj: List[Tuple[int, int]] = []
+            while rem > 0 and idx < self.max_len and len(traj) < 64:
+                k = min(self.epoch_len, rem, LANE - (idx % LANE))
+                if idx + k > self.max_len:
+                    break
+                traj.append((k, self._kv_len(idx + k)))
+                idx += k
+                rem -= k
+            preds[t.tid] = (plan, start, traj)
+        horizon = max((start + len(traj)
+                       for _, start, traj in preds.values()), default=0)
+        keys: List[Tuple] = []
+        seen = set()
+        for e in range(min(horizon, 128)):
+            per_tenant: Dict[str, Tuple] = {}
+            for tid, (plan, start, traj) in preds.items():
+                if start <= e < start + len(traj):
+                    per_tenant[tid] = (plan,) + traj[e - start]
+            if not per_tenant:
+                continue
+            key_items: List[Tuple] = []
+            done = set()
+            for t in self.tenants:
+                if t.tid in done or t.tid not in per_tenant:
+                    continue
+                plan, k, kv = per_tenant[t.tid]
+                group = self._groups[t.cfg.name]
+                bucketable = (
+                    len(group) >= 2
+                    and all(g.tid in per_tenant for g in group)
+                    and all(per_tenant[g.tid] == (plan, k, kv)
+                            for g in group)
+                    and len({g.kv_dtype for g in group}) == 1)
+                if bucketable:
+                    key_items.append(("bucket", t.cfg.name, plan, k, kv))
+                    done.update(g.tid for g in group)
+                else:
+                    key_items.append(("single", t.cfg.name, plan, k, kv))
+                    done.add(t.tid)
+            key = tuple(key_items)
+            if key and key not in seen:
+                seen.add(key)
+                keys.append(key)
+        return keys
+
+    def _abstract_epoch_args(self, key: Tuple) -> Optional[Tuple]:
+        """Abstract (ShapeDtypeStruct) fused-program arguments for a
+        predicted key — what ``jit(...).lower`` consumes.  None when an
+        arch group has emptied since prediction."""
+        lists: Tuple[List, ...] = ([], [], [], [], [])
+        for kind, name, plan, k, kv in key:
+            group = self._groups.get(name)
+            if not group:
+                return None
+            t0 = group[0]
+            specs = M.decode_epoch_input_specs(
+                t0.cfg, self.batch, self.max_len, t0.kv_dtype,
+                group=(len(group) if kind == "bucket" else None))
+            for lst, spec in zip(lists, specs):
+                lst.append(spec)
+        return lists
+
+    def warm_aot(self, steps: int) -> None:
+        """Precompile the predicted fused-epoch universe on a daemon
+        thread: enumerate the reachable (plans, k, kv) keys, build each
+        key's program, and compile it against the predicted abstract
+        arguments via ``jit(...).lower(...).compile()``.  The epoch
+        boundary then dispatches precompiled executables instead of
+        tracing — zero post-warmup compiles in steady state.  Restricted
+        to single-device servers: pinned/sharded lowering needs concrete
+        shardings the predictor does not model."""
+        if not (self.pipeline and self.aot_warmup
+                and self.device is None and self.mesh is None):
+            return
+
+        # The ENTIRE warmup — key enumeration, abstract-spec construction,
+        # lowering, compile — runs on the daemon thread: enumeration walks
+        # pure helpers (_simulate_block_sels / _lower_plan / _dec_plan)
+        # and spec building traces eval_shape, both way too slow for the
+        # epoch-planning path this feature exists to keep empty.  Racing
+        # admissions/departures can at worst mispredict a key (one wasted
+        # background compile) — the runtime path still compiles lazily on
+        # any miss.
+        def warm():
+            try:
+                keys = self._enumerate_epoch_keys(steps)
+            except Exception:     # torn read during tenancy churn: skip
+                self._aot_failed += 1
+                return
+            for key in keys:
+                try:
+                    entry = self._fused_jits.peek(key)
+                    if entry is None:
+                        entry = _CompiledEntry(self._build_fused_jit(key))
+                        self._fused_jits[key] = entry
+                    specs = self._abstract_epoch_args(key)
+                    if specs is None:
+                        continue
+                    sig = _aval_sig(specs)
+                    if sig in entry.aot:
+                        continue
+                    entry.aot[sig] = entry.fallback.lower(*specs).compile()
+                    self._aot_compiled += 1
+                except Exception:   # prediction miss: fall back lazily
+                    self._aot_failed += 1
+
+        th = threading.Thread(target=warm, name="aot-warm", daemon=True)
+        th.start()
+        self._aot_threads.append(th)
+
+    def wait_aot(self, timeout: Optional[float] = None) -> None:
+        """Join outstanding AOT warmup threads (benchmarks call this
+        between the warmup and measured passes)."""
+        for th in self._aot_threads:
+            th.join(timeout)
+        self._aot_threads = [t for t in self._aot_threads if t.is_alive()]
 
     def _prefill_fn(self, name: str):
         """Jitted prefill-chunk program, one per arch; jit's own cache
@@ -1221,6 +1810,21 @@ class MultiTenantServer:
         return None
 
     def _dispatch_epoch(self, work: List[Tuple]) -> None:
+        """Timed wrapper around the epoch dispatcher: the `device_wall`
+        half of the host/device overlap instrumentation (donation
+        backpressure makes the dispatch wall track device time in steady
+        state), plus the per-epoch compile-miss delta — new fused or
+        prefill programs built while dispatching this epoch."""
+        m0 = self._fused_jits.misses + self._prefill_jits.misses
+        t0 = time.perf_counter()
+        try:
+            self._dispatch_epoch_inner(work)
+        finally:
+            self._device_walls.append(time.perf_counter() - t0)
+            self._epoch_compiles.append(
+                self._fused_jits.misses + self._prefill_jits.misses - m0)
+
+    def _dispatch_epoch_inner(self, work: List[Tuple]) -> None:
         """Launch one epoch's work: the prefill chunks dispatch first
         (each through its cached per-arch chunk program), then ALL the
         decode items as ONE fused device call.  Everything is
@@ -1312,6 +1916,17 @@ class MultiTenantServer:
         t.outputs.append(nxt[:, None])
         self._advance(t, 1)
 
+    def _resolve_qos(self, tid: str) -> Optional[float]:
+        """Most-specific QoS match: the longest pattern key contained in
+        the tenant id wins (a bare arch suffix must not override an
+        exact tenant key).  Run ONCE per tenant at admission; the result
+        is pinned on ``Tenant.qos_target``."""
+        target, best_len = None, -1
+        for k, v in self.qos_targets.items():
+            if k in tid and len(k) > best_len:
+                target, best_len = v, len(k)
+        return target
+
     def _slack(self, t: Tenant, now: float) -> float:
         """QoS slack as a fraction of the target rate (negative = late).
 
@@ -1320,13 +1935,7 @@ class MultiTenantServer:
         0-or-huge near now=0 and made the ordering flap over the first
         steps.  ``now`` is computed once per epoch by the caller, not
         per tenant."""
-        # most-specific match wins: the longest key matching the tenant
-        # id (a bare arch suffix must not override an exact tenant key)
-        target = None
-        best_len = -1
-        for k, v in self.qos_targets.items():
-            if k in t.tid and len(k) > best_len:
-                target, best_len = v, len(k)
+        target = t.qos_target
         if target is None:
             return float("inf")
         if t.tokens_served == 0 or now <= 0.0:
@@ -1340,6 +1949,17 @@ class MultiTenantServer:
         """Per-run reset (start of :meth:`run`; the fleet driver calls
         it once per replica before interleaving their epochs)."""
         self._run_t0 = time.time()
+        self._run_steps = steps
+        # host-path instrumentation is per-run: a warmed-server replay
+        # reports its own epochs (the post-warmup compile gate)
+        self._sched_walls = []
+        self._device_walls = []
+        self._admit_walls = []
+        self._admit_wall = 0.0
+        self._epoch_compiles = []
+        self._lookahead_adjusted = 0
+        self._batched_runs = 0
+        self._oracle_runs = 0
         for t in self.tenants:
             t.run_steps = 0
             if t.admitted_wall is None or not t.outputs:
@@ -1351,6 +1971,7 @@ class MultiTenantServer:
         self._begin_run(steps)
         t0 = self._run_t0
         if self.pipeline:
+            self.warm_aot(steps)   # no-op unless aot_warmup
             pending = self._plan_epoch(0.0, steps)
             while pending:
                 self._dispatch_epoch(pending)
@@ -1438,6 +2059,44 @@ class MultiTenantServer:
             "prefix": self.prefix.stats(),
             "p95_ttft_s": (float(np.percentile(ttfts, 95)) if ttfts
                            else None),
+            "host": self._host_stats(),
+        }
+
+    def _host_stats(self) -> Dict[str, Any]:
+        """Host-off-the-critical-path instrumentation for the finished
+        run: per-epoch host scheduling wall vs dispatch wall, compile
+        misses per epoch, batched-vs-oracle planner mix, and the AOT /
+        jit-cache counters — everything the --host benchmark gates on."""
+        sched = float(sum(self._sched_walls))
+        device = float(sum(self._device_walls))
+        entries = [self._fused_jits.peek(k) for k in self._fused_jits.keys()]
+        entries = [e for e in entries if isinstance(e, _CompiledEntry)]
+        return {
+            "epochs": len(self._device_walls),
+            "sched_wall_s": sched,
+            "device_wall_s": device,
+            # tenant onboarding (param/cache materialization, prompt
+            # synthesis) — reported apart so sched_wall is scheduling only
+            "admit_wall_s": float(sum(self._admit_walls)),
+            "sched_frac": sched / device if device > 0 else 0.0,
+            "epoch_sched_walls": [round(x, 6) for x in self._sched_walls],
+            "epoch_device_walls": [round(x, 6) for x in self._device_walls],
+            "epoch_compiles": list(self._epoch_compiles),
+            "batched_runs": self._batched_runs,
+            "oracle_runs": self._oracle_runs,
+            "lookahead_adjusted": self._lookahead_adjusted,
+            "aot_compiled": self._aot_compiled,
+            "aot_failed": self._aot_failed,
+            "aot_hits": sum(e.aot_hits for e in entries),
+            "fallback_calls": sum(e.fallback_calls for e in entries),
+            "jit_cache": {
+                "fused": {"hits": self._fused_jits.hits,
+                          "misses": self._fused_jits.misses,
+                          "evictions": self._fused_jits.evictions},
+                "prefill": {"hits": self._prefill_jits.hits,
+                            "misses": self._prefill_jits.misses,
+                            "evictions": self._prefill_jits.evictions},
+            },
         }
 
 
@@ -1706,6 +2365,15 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="fleet mode: split the host into N XLA devices "
                          "and serve over an (N, 1) replica mesh")
+    ap.add_argument("--oracle-sched", action="store_true",
+                    help="force the per-tenant Algorithm 1 oracle "
+                         "(disable the batched epoch planner)")
+    ap.add_argument("--lookahead", action="store_true",
+                    help="predictive grant lookahead against next-epoch "
+                         "pool pressure (changes grants)")
+    ap.add_argument("--aot", action="store_true",
+                    help="AOT-precompile predicted fused epoch programs "
+                         "on a background thread")
     args = ap.parse_args()
     arrivals = None
     if args.arrivals > 0:
@@ -1737,7 +2405,10 @@ def main() -> None:
                             max_len=args.max_len,
                             arrivals=arrivals,
                             admission=args.admission,
-                            kv_dtype=args.kv_dtype)
+                            kv_dtype=args.kv_dtype,
+                            batch_sched=not args.oracle_sched,
+                            lookahead=args.lookahead,
+                            aot_warmup=args.aot)
     out = srv.run(args.steps)
     for tid, info in out["tenants"].items():
         ttft = (f", TTFT {info['ttft_s'] * 1e3:.0f}ms "
@@ -1759,6 +2430,15 @@ def main() -> None:
           f"(K={out['epoch_len']}): {out['tokens_per_s']:.1f} tok/s total, "
           f"{out['prefill_tokens']} prompt tokens{p95}, "
           f"{out['dram_bytes'] / 2**20:.1f} MB modeled DRAM")
+    host = out.get("host") or {}
+    if host.get("epochs"):
+        print(f"[serve] host: sched {host['sched_wall_s'] * 1e3:.1f}ms vs "
+              f"device {host['device_wall_s'] * 1e3:.1f}ms "
+              f"({host['sched_frac'] * 100:.1f}%), "
+              f"{host['batched_runs']} batched / {host['oracle_runs']} "
+              f"oracle runs, compiles/epoch {host['epoch_compiles']}, "
+              f"aot {host['aot_compiled']} compiled "
+              f"({host['aot_hits']} hits)")
 
 
 if __name__ == "__main__":

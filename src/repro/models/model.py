@@ -264,6 +264,43 @@ def opt_specs_shapes(params_shapes):
     return jax.eval_shape(adamw.init, params_shapes)
 
 
+# Keyed on (arch name, batch, max_len, kv_dtype, group): the AOT
+# precompiler asks for the same handful of spec tuples on every warmup
+# round, and each construction costs two eval_shape traces.  Specs are
+# immutable ShapeDtypeStruct trees, so sharing is safe.
+_EPOCH_SPEC_CACHE: Dict[tuple, tuple] = {}
+
+
+def decode_epoch_input_specs(cfg: ArchConfig, batch: int, max_len: int,
+                             kv_dtype: Optional[str] = None,
+                             group: Optional[int] = None):
+    """(params, caches, token, index, enc_out) ShapeDtypeStructs for one
+    fused-epoch work item — the abstract arguments the serving layer's
+    AOT precompiler lowers fused epoch programs against.  ``group`` adds
+    the leading tenant axis of a plan-bucketed item
+    (:func:`make_decode_epoch_batched`)."""
+    ck = (cfg.name, batch, max_len, kv_dtype, group)
+    hit = _EPOCH_SPEC_CACHE.get(ck)
+    if hit is not None:
+        return hit
+    params = param_specs_shapes(cfg)
+    caches = cache_specs(cfg, batch, max_len, kv_dtype=kv_dtype)
+    token = _sds((batch, 1), jnp.int32)
+    index = _sds((), jnp.int32)
+    enc = (_sds((batch, cfg.enc_len, cfg.d_model), cfg.jdtype)
+           if cfg.family == "encdec" else None)
+    if group is not None:
+        def stack(x):
+            return _sds((group,) + tuple(x.shape), x.dtype)
+        params = jax.tree_util.tree_map(stack, params)
+        caches = jax.tree_util.tree_map(stack, caches)
+        token = stack(token)
+        index = _sds((group,), jnp.int32)
+        enc = stack(enc) if enc is not None else None
+    _EPOCH_SPEC_CACHE[ck] = (params, caches, token, index, enc)
+    return params, caches, token, index, enc
+
+
 def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
     """All step-function inputs as ShapeDtypeStructs, keyed by arg name."""
     params = param_specs_shapes(cfg)

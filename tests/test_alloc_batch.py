@@ -1,0 +1,273 @@
+"""Batched Algorithm 1 vs the per-tenant oracle: bit-exactness property
+tests at every level of the stack — the MCT best-fit tables, the
+predicted-pages pass, batched selection, batched pricing/charging, and
+the end-to-end epoch-pipelined server (batch_sched on vs off must agree
+on every Selection, every NEC counter, and every decoded token)."""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.allocator import DynamicCacheAllocator
+from repro.core.cache import CacheConfig, SharedCache
+from repro.core.mct import MCT, CacheMapEntry, MappingCandidate
+from repro.core.nec import Nec, Traffic
+from repro.core.policy import CamdnPolicy, charge_and_plan, \
+    charge_and_plan_batch
+from repro.core.runtime import TenantModel, TenantTask
+from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph
+from repro.sim.driver import TenantSpec
+
+
+def _cand(kind, pages, dram):
+    return MappingCandidate(kind=kind, p_need=pages, dram_bytes=dram,
+                            flops=1000, loops=(),
+                            cache_map=(CacheMapEntry("x", 0, max(pages, 1)),),
+                            usage_limit_bytes=pages * 32768)
+
+
+def _mct(lwm_pages, lbm_pages=None):
+    lwms = [_cand("LWM", p, 10_000 - 37 * p) for p in lwm_pages]
+    lbm = _cand("LBM", lbm_pages, 1_000) if lbm_pages else None
+    return MCT("layer", lwms, lbm)
+
+
+# ---------------------------------------------------- MCT fit tables --
+def test_best_fit_batch_matches_scalar():
+    """Vectorized best-fit returns the IDENTICAL candidate object the
+    scalar walk picks, including duplicate-p_need ties, exact-boundary
+    budgets, and clamped negative budgets."""
+    rng = random.Random(7)
+    for _ in range(40):
+        pages = sorted({0} | {rng.randint(1, 160)
+                              for _ in range(rng.randint(1, 5))})
+        if rng.random() < 0.3:           # duplicate p_need tie
+            pages.append(pages[-1])
+        mct = _mct(tuple(pages))
+        avail = np.array([rng.randint(-8, 200) for _ in range(32)]
+                         + pages + [p - 1 for p in pages], np.int64)
+        got = mct.best_fit_batch(avail)
+        for a, g in zip(avail, got):
+            assert g is mct.best_fit(int(a)), f"avail={a} pages={pages}"
+
+
+# ------------------------------------------------ predicted pages -----
+def test_pred_avail_pages_batch_matches_scalar():
+    rng = random.Random(11)
+    cache = SharedCache(CacheConfig())
+    alloc = DynamicCacheAllocator(cache)
+    names = [f"t{i}" for i in range(6)]
+    for n in names:
+        alloc.register_task(n)
+        held = rng.randint(0, 40)
+        if held:
+            assert cache.alloc(n, held) is not None
+        alloc.update_profile(n, now=rng.random(),
+                             next_realloc_in=rng.random(),
+                             next_p_need=rng.randint(0, 50), p_alloc=held)
+    queries = [(rng.random() * 2.0, rng.choice(names + ["ghost"]))
+               for _ in range(64)]
+    got = alloc.pred_avail_pages_batch(
+        np.array([q[0] for q in queries]), [q[1] for q in queries])
+    for (t_ahead, tid), g in zip(queries, got):
+        assert int(g) == alloc.pred_avail_pages(t_ahead, tid)
+
+
+# ------------------------------------------------- batched select -----
+def test_select_batch_matches_scalar_select():
+    """Randomized allocator states (held pages, pending profile deltas,
+    live LBM flags, LBM-less MCTs): select_batch must reproduce the
+    scalar select bit-for-bit — candidate identity, p_cur, t_ahead."""
+    rng = random.Random(13)
+    for _ in range(25):
+        cache = SharedCache(CacheConfig())
+        alloc = DynamicCacheAllocator(cache)
+        n = rng.randint(1, 8)
+        names, mcts = [], []
+        for i in range(n):
+            name = f"t{i}"
+            names.append(name)
+            alloc.register_task(name)
+            lwm = sorted({0} | {rng.randint(1, 120)
+                                for _ in range(rng.randint(1, 4))})
+            lbm = rng.choice([None, rng.randint(8, 300)])
+            mcts.append(_mct(tuple(lwm), lbm))
+            held = rng.randint(0, 30)
+            if held:
+                assert cache.alloc(name, held) is not None
+            alloc.update_profile(name, now=0.0,
+                                 next_realloc_in=rng.random(),
+                                 next_p_need=rng.randint(0, 40),
+                                 p_alloc=held)
+            if rng.random() < 0.3:
+                alloc.set_lbm(name, True)
+        now = rng.random()
+        lts = [rng.random() for _ in range(n)]
+        bts = [lt * rng.randint(1, 6) for lt in lts]
+        heads = [rng.random() < 0.5 for _ in range(n)]
+        batch = alloc.select_batch(names, mcts, now, lts, bts, heads)
+        for i, name in enumerate(names):
+            want = alloc.select(name, mcts[i], now, lts[i], bts[i],
+                                heads[i])
+            assert batch[i].candidate is want.candidate
+            assert batch[i].p_cur == want.p_cur
+            assert batch[i].t_ahead == want.t_ahead
+
+
+def test_select_batch_lbm_override_matches_flag_state():
+    """The epoch planner simulates would-be LBM flags analytically;
+    passing them via ``lbm_enabled`` must equal setting the live flags."""
+    cache = SharedCache(CacheConfig())
+    alloc = DynamicCacheAllocator(cache)
+    mcts = [_mct((0, 8, 64), 96), _mct((0, 16), 48)]
+    names = ["a", "b"]
+    for n in names:
+        alloc.register_task(n)
+    args = (0.0, [1.0, 2.0], [5.0, 4.0], [False, True])
+    overridden = alloc.select_batch(names, mcts, *args,
+                                    lbm_enabled=[True, False])
+    alloc.set_lbm("a", True)
+    for i, name in enumerate(names):
+        want = alloc.select(name, mcts[i], args[0], args[1][i],
+                            args[2][i], args[3][i])
+        assert overridden[i].candidate is want.candidate
+        assert overridden[i].p_cur == want.p_cur
+        assert overridden[i].t_ahead == want.t_ahead
+
+
+# ------------------------------------------- batched charge + plan ----
+def _graph(nlayers=4, m=256, k=512, n=512):
+    layers = [LayerSpec(f"l{i}", LayerKind.GEMM, (GemmDims(m, n, k),),
+                        input_bytes=m * k, output_bytes=m * n,
+                        weight_bytes=k * n) for i in range(nlayers)]
+    return ModelGraph("conf", layers, qos_ms=10.0)
+
+
+def _camdn_stack(n_tasks=4):
+    cache = SharedCache(CacheConfig())
+    nec = Nec(cache)
+    policy = CamdnPolicy(DynamicCacheAllocator(cache))
+    tm = TenantModel(_graph())
+    tasks = [TenantTask(f"t{i}", tm, cache, nec, policy)
+             for i in range(n_tasks)]
+    return nec, policy, tasks
+
+
+def test_charge_and_plan_batch_matches_sequential():
+    """Batched pricing + charging produces the exact ExecutionPlans and
+    per-tenant Traffic counters of sequential charge_and_plan calls —
+    across layer cursors, charge_repeat folds, and a shared memo."""
+    nec_a, pol_a, tasks_a = _camdn_stack()
+    nec_b, pol_b, tasks_b = _camdn_stack()
+    for i, (ta, tb) in enumerate(zip(tasks_a, tasks_b)):
+        ta.layer_idx = tb.layer_idx = i % ta.model.num_layers
+        ta.charge_repeat = tb.charge_repeat = 1 + (i % 3)
+    # TenantModel mappings are content-memoized, so both stacks share
+    # candidate objects — selections must agree before pricing does
+    sels_a = [pol_a.select(t, 0.5) for t in tasks_a]
+    sels_b = pol_b.select_batch(tasks_b, 0.5)
+    for sa, sb in zip(sels_a, sels_b):
+        assert sa.candidate is sb.candidate and sa.p_cur == sb.p_cur
+    cands = [s.candidate for s in sels_a]
+    plans_a = [charge_and_plan(t, c, pol_a._price_cache)
+               for t, c in zip(tasks_a, cands)]
+    plans_b = charge_and_plan_batch(list(zip(tasks_b, cands)),
+                                    pol_b._price_cache)
+    for pa, pb in zip(plans_a, plans_b):
+        assert dataclasses.astuple(pa) == dataclasses.astuple(pb)
+    for ta, tb in zip(tasks_a, tasks_b):
+        assert (dataclasses.astuple(nec_a.ledger.per_tenant[ta.id])
+                == dataclasses.astuple(nec_b.ledger.per_tenant[tb.id]))
+    assert (dataclasses.astuple(nec_a.traffic)
+            == dataclasses.astuple(nec_b.traffic))
+
+
+# ------------------------------------- end-to-end server parity -------
+def _scenario():
+    return [
+        TenantSpec("yi-9b", prompt_len=64, n_inferences=12, arrive_at=0.0),
+        TenantSpec("olmoe-1b-7b", prompt_len=32, n_inferences=20,
+                   arrive_at=2.0),
+        TenantSpec("mamba2-370m", prompt_len=48, n_inferences=16,
+                   arrive_at=5.0),
+        TenantSpec("yi-9b", prompt_len=64, n_inferences=8, arrive_at=9.0),
+    ]
+
+
+@pytest.fixture(scope="module")
+def sched_parity():
+    from repro.launch.serve import MultiTenantServer
+    kw = dict(batch=1, max_len=128, total_pages=96, epoch_len=4,
+              qos_targets={"yi-9b": 0.05})
+    batched = MultiTenantServer([], tenants=_scenario(), batch_sched=True,
+                                **kw)
+    oracle = MultiTenantServer([], tenants=_scenario(), batch_sched=False,
+                               **kw)
+    return (batched, batched.run(24)), (oracle, oracle.run(24))
+
+
+def test_batched_planner_is_bit_identical_to_oracle(sched_parity):
+    """Dynamic tenancy (staggered arrivals/departures, prompts, QoS
+    ordering): the batched epoch planner must reproduce the per-tenant
+    oracle exactly — tokens, outputs, choice traces, plan traces."""
+    (_, out_b), (_, out_o) = sched_parity
+    assert set(out_b["tenants"]) == set(out_o["tenants"])
+    for tid in out_o["tenants"]:
+        assert (out_b["tenants"][tid]["tokens"]
+                == out_o["tenants"][tid]["tokens"])
+        np.testing.assert_array_equal(
+            out_b["tenants"][tid]["output"], out_o["tenants"][tid]["output"],
+            err_msg=f"batched planner diverged for {tid}")
+        assert (out_b["tenants"][tid]["choices"]
+                == out_o["tenants"][tid]["choices"])
+        assert (out_b["tenants"][tid]["plans"]
+                == out_o["tenants"][tid]["plans"])
+
+
+def test_batched_planner_preserves_nec_counters(sched_parity):
+    """All five Traffic counters — not just DRAM totals — must match."""
+    (srv_b, out_b), (srv_o, out_o) = sched_parity
+    assert out_b["dram_bytes"] == out_o["dram_bytes"] > 0
+    assert (dataclasses.astuple(srv_b.nec.traffic)
+            == dataclasses.astuple(srv_o.nec.traffic))
+
+
+def test_batched_planner_actually_ran_batched(sched_parity):
+    (srv_b, out_b), (srv_o, out_o) = sched_parity
+    hb, ho = out_b["host"], out_o["host"]
+    assert hb["batched_runs"] > 0
+    assert hb["oracle_runs"] == 0, \
+        "decode runs unexpectedly fell back to the per-tenant oracle"
+    assert ho["batched_runs"] == 0 and ho["oracle_runs"] > 0
+
+
+# ------------------------------------------- predictive lookahead -----
+def test_lookahead_adjusts_contested_grants_without_changing_tokens():
+    """Two known arrivals one epoch out + a pool too small for the
+    resident's preferred grant once their KV reservations land: the
+    lookahead must fire (switch beats stay in projected DRAM once the
+    shortfall outweighs the grant-quality gap) while leaving every
+    decoded token untouched — grants steer residency and traffic,
+    never numerics."""
+    from repro.launch.serve import MultiTenantServer
+
+    def specs():
+        return [TenantSpec("yi-9b", n_inferences=24),
+                TenantSpec("yi-9b", prompt_len=192, n_inferences=8,
+                           arrive_at=3.0),
+                TenantSpec("yi-9b", prompt_len=192, n_inferences=8,
+                           arrive_at=3.25)]
+
+    kw = dict(batch=1, max_len=256, total_pages=36, epoch_len=2)
+    ahead = MultiTenantServer([], tenants=specs(), lookahead=True, **kw)
+    base = MultiTenantServer([], tenants=specs(), **kw)
+    out_a, out_b = ahead.run(24), base.run(24)
+    assert out_a["host"]["lookahead_adjusted"] >= 1, \
+        "lookahead never fired on the contested scenario"
+    assert out_b["host"]["lookahead_adjusted"] == 0
+    for tid in out_b["tenants"]:
+        assert (out_a["tenants"][tid]["tokens"]
+                == out_b["tenants"][tid]["tokens"])
+        np.testing.assert_array_equal(out_a["tenants"][tid]["output"],
+                                      out_b["tenants"][tid]["output"])
