@@ -27,9 +27,11 @@ decode) and records the ``prefix`` entry; ``--fleet`` runs the
 ``--quant`` runs the precision-for-residency benchmark (int8 KV vs
 native on an oversubscribed page pool: effective-pages gain, tokens/s
 ratio, decode-accuracy bound, plus the analytic quantized-kernel
-roofline gate under ``--check``) and records the ``quant`` entry.  All
-three merge into BENCH_serve.json without disturbing the other modes'
-entries.
+roofline gate under ``--check``) and records the ``quant`` entry;
+``--faults`` runs the fault-injection suite (preempt/resume decode
+bit-identity, replica-kill failover recovery p95, 2x-oversubscription
+overload shedding) and records the ``faults`` entry.  All modes merge
+into BENCH_serve.json without disturbing the other modes' entries.
 """
 from __future__ import annotations
 
@@ -362,6 +364,128 @@ def serve_fleet_bench() -> dict:
         "page_util": utils,
         "page_util_balance": round(out_f["page_util_balance"], 2),
         "decode_bit_identical": True,
+    }
+
+
+def serve_faults_bench() -> dict:
+    """Fault-injection benchmark (the `faults` BENCH_serve.json entry),
+    three acceptance scenarios on a forced 4-device host:
+
+    * **preempt/resume** — one tenant preempted mid-decode (KV
+      checkpoint, pages freed, resumed two epochs later) must produce a
+      decode stream bit-identical to an uninterrupted run;
+    * **failover** — a 2-replica fleet loses r0 at an epoch boundary;
+      every moved tenant must complete on a survivor and the recovery
+      p95 (survivor TTFT clocked from the kill) is recorded and gated;
+    * **overload** — a 2x-oversubscribed arrival burst against a small
+      page pool must defer/shed (bounded queue, deadline-aware) with
+      ZERO unhandled exceptions and an empty queue at end of run.
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.launch import env
+    from repro.launch.serve import FleetServer, MultiTenantServer
+    from repro.sim.driver import TenantSpec
+    from repro.sim.faults import FaultEvent, FaultPlan
+
+    env.set_host_device_count(4)
+    print(f"[bench] faults env: {env.describe()}", file=sys.stderr)
+    arch = "mamba2-370m"
+    kw = dict(batch=1, max_len=128, epoch_len=4)
+
+    # --- preempt -> resume bit-identity --------------------------------
+    spec = TenantSpec(arch, prompt_len=32, n_inferences=24)
+    ref = MultiTenantServer([], total_pages=64,
+                            tenants=[dataclasses.replace(spec)], **kw)
+    out_ref = ref.run(24)
+    plan = FaultPlan([FaultEvent(step=8, kind="preempt", hold_epochs=2)])
+    srv = MultiTenantServer([], total_pages=64, faults=plan,
+                            tenants=[dataclasses.replace(spec)], **kw)
+    out_p = srv.run(24)
+    (tid, info_ref), = out_ref["tenants"].items()
+    info_p = out_p["tenants"][tid]
+    bit_identical = bool(
+        info_ref["output"].shape == info_p["output"].shape
+        and np.array_equal(info_ref["output"], info_p["output"]))
+    n_preempt = out_p["faults"]["preemptions"]
+
+    # --- replica-kill failover -----------------------------------------
+    fleet = FleetServer(
+        n_replicas=2, pages_per_replica=64, faults=FaultPlan(
+            [FaultEvent(step=8, kind="replica_kill", target="r0")]),
+        tenants=[TenantSpec(arch, prompt_len=32, n_inferences=24,
+                            arrive_at=float(i)) for i in range(3)],
+        **kw)
+    out_f = fleet.run(24)
+    fo = out_f["failover"]
+    moved = fo["moved"]
+    all_completed = bool(moved) and all(
+        out_f["tenants"][m["tid"]]["replica"] == m["to"]
+        and out_f["tenants"][m["tid"]]["output"].shape[-1] > 0
+        and m["tid"] in fo["recovery_s"]
+        for m in moved)
+    recovery_p95 = fo["recovery_p95_s"]
+
+    # --- overload burst -------------------------------------------------
+    burst = [TenantSpec(arch, prompt_len=96, n_inferences=8, arrive_at=0.5,
+                        qos_ms=(None if i % 3 == 0 else 50.0 * (i + 1)))
+             for i in range(12)]
+    unhandled = 0
+    try:
+        # queue_limit below the burst size: the overflow sheds on
+        # arrival, the rest defers against the tiny pool
+        osrv = MultiTenantServer([], total_pages=8, queue_limit=8,
+                                 queue_deadline_s=24.0, tenants=[], **kw)
+        osrv.enqueue(burst)
+        out_o = osrv.run(16)
+    except Exception as exc:   # the whole point: overload must not raise
+        unhandled = 1
+        out_o = {"overload": {"shed_count": 0, "deferrals": 0,
+                              "queued": 1, "shed": []},
+                 "tenants": {}}
+        print(f"[bench] FAULTS overload raised: {exc!r}", file=sys.stderr)
+    ov = out_o["overload"]
+    shed_rate = ov["shed_count"] / len(burst)
+
+    emit("serve_fault_recovery",
+         (recovery_p95 or 0.0) * 1e6,
+         f"failover recovery p95 {1e3 * (recovery_p95 or 0):.0f}ms | "
+         f"{len(moved)} moved, completed={all_completed} | "
+         f"preempt/resume bit-identical={bit_identical}",
+         extra={"moved": len(moved),
+                "bit_identical": bit_identical})
+    emit("serve_fault_overload", shed_rate * 1e6,
+         f"2x burst: {ov['shed_count']}/{len(burst)} shed, "
+         f"{ov['deferrals']} deferrals, {unhandled} unhandled",
+         extra={"shed_rate": round(shed_rate, 3)})
+    return {
+        "workload": {"arch": arch, "steps": 24, "epoch_len": 4,
+                     "burst_arrivals": len(burst),
+                     "burst_pages": 8, "n_replicas": 2},
+        "preempt": {
+            "decode_bit_identical": bit_identical,
+            "preemptions": n_preempt,
+            "recovery_s": out_p["faults"]["recovery_s"],
+        },
+        "failover": {
+            "killed": fo["killed"],
+            "moved": len(moved),
+            "all_completed": all_completed,
+            "recovery_p95_s": (round(recovery_p95, 3)
+                               if recovery_p95 is not None else None),
+        },
+        "overload": {
+            "shed_rate": round(shed_rate, 3),
+            "shed_count": ov["shed_count"],
+            "deferrals": ov["deferrals"],
+            "queued_at_end": ov["queued"],
+            "unhandled_exceptions": unhandled,
+            "served": sum(1 for i in out_o["tenants"].values()
+                          if i["tokens"] > 0),
+        },
     }
 
 
@@ -771,7 +895,12 @@ def _check_serve(baseline: dict, fresh: dict) -> int:
     effective KV pages per tenant at int8, <2x tokens/s regression vs
     the native-KV server, full int8 residency on the oversubscribed
     pool, and the documented accuracy bound (decode logits cosine >=
-    0.999 vs the native reference)."""
+    0.999 vs the native reference).  A fresh `faults` entry is gated on
+    the ISSUE-10 acceptance floor: preempt/resume decode bit-identity,
+    every killed replica's tenant completing on a survivor with a
+    recorded recovery p95 under the ceiling, and the overload burst
+    shedding/deferring with zero unhandled exceptions and a drained
+    queue."""
     failures = []
     base = baseline.get("pipelined", {}).get("tokens_per_s", 0.0)
     got = fresh.get("pipelined", {}).get("tokens_per_s", 0.0)
@@ -846,6 +975,35 @@ def _check_serve(baseline: dict, fresh: dict) -> int:
         if bqt and gqt < bqt / 2.0:
             failures.append(f"serve_quant: {gqt:.1f} tok/s (int8) is "
                             f"<0.5x the baseline {bqt:.1f} tok/s")
+    got_ft = fresh.get("faults", {})
+    if got_ft:
+        if got_ft.get("preempt", {}).get("decode_bit_identical") is not True:
+            failures.append("serve_faults: preempted-resumed decode stream "
+                            "was not bit-identical to the uninterrupted run")
+        if got_ft.get("preempt", {}).get("preemptions", 0) < 1:
+            failures.append("serve_faults: the preempt fault never fired")
+        fov = got_ft.get("failover", {})
+        if not fov.get("all_completed", False):
+            failures.append("serve_faults: not every killed replica's "
+                            "tenant completed on a survivor")
+        rp = fov.get("recovery_p95_s")
+        if rp is None:
+            failures.append("serve_faults: failover recovery p95 was not "
+                            "recorded")
+        elif rp > 20.0:
+            failures.append(f"serve_faults: failover recovery p95 {rp:.1f}s "
+                            f"exceeds the 20s ceiling")
+        ovf = got_ft.get("overload", {})
+        if ovf.get("unhandled_exceptions", 1) != 0:
+            failures.append("serve_faults: the overload burst raised an "
+                            "unhandled exception")
+        if ovf.get("shed_count", 0) + ovf.get("deferrals", 0) <= 0:
+            failures.append("serve_faults: a 2x-oversubscribed burst "
+                            "neither shed nor deferred anything")
+        if ovf.get("queued_at_end", 1) != 0:
+            failures.append(f"serve_faults: {ovf.get('queued_at_end')} "
+                            f"arrivals still queued at end of run "
+                            f"(queue must drain: admit or shed)")
     got_h = fresh.get("host", {})
     if got_h:
         sf = got_h.get("sched_frac", 1.0)
@@ -900,6 +1058,12 @@ def _check_serve(baseline: dict, fresh: dict) -> int:
                 f"quant {got_q.get('effective_pages_gain', 0):.2f}x pages "
                 f"@ {got_q.get('tokens_per_s_ratio', 0):.2f}x tok/s, cos "
                 f"{got_q.get('accuracy', {}).get('min_cosine', 0):.5f}")
+        if got_ft:
+            rp = got_ft.get("failover", {}).get("recovery_p95_s", 0) or 0
+            parts.append(
+                f"faults recovery p95 {rp * 1e3:.0f}ms, shed rate "
+                f"{got_ft.get('overload', {}).get('shed_rate', 0):.2f}, "
+                f"bit-identical resume")
         if got_h:
             pick = got_h.get("sweep_pick", {})
             parts.append(
@@ -1043,6 +1207,30 @@ def main() -> None:
             _write_serve_json(serve_payload)
         else:
             print("[bench] fleet check FAILED; baseline left untouched",
+                  file=sys.stderr)
+        sys.exit(rc)
+    if "--faults" in args:
+        # fault-injection entry (CI fault-smoke job): forces 4 host
+        # devices, gates on the ISSUE-10 floors (bit-identical resume,
+        # failover completion + recovery p95, overload shed/defer with
+        # zero unhandled exceptions)
+        t0 = time.time()
+        print("name,us_per_call,derived")
+        serve_payload = {"schema": 1, "faults": serve_faults_bench()}
+        wall_s = time.time() - t0
+        rc = 0
+        if budget_s and wall_s > budget_s:
+            print(f"[bench-check] FAIL wall {wall_s:.1f}s exceeds budget "
+                  f"{budget_s:.0f}s", file=sys.stderr)
+            rc = 1
+        if "--check" in args:
+            baseline = (json.loads(BENCH_SERVE_JSON.read_text())
+                        if BENCH_SERVE_JSON.exists() else {})
+            rc |= _check_serve(baseline, serve_payload)
+        if rc == 0:
+            _write_serve_json(serve_payload)
+        else:
+            print("[bench] faults check FAILED; baseline left untouched",
                   file=sys.stderr)
         sys.exit(rc)
     if "--prefix" in args:

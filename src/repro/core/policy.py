@@ -255,6 +255,50 @@ def choose_kv_dtype(want_pages: Dict[str, int], free_pages: int,
 
 
 # ---------------------------------------------------------------------------
+# Preemption victim selection.  When the pool must be reclaimed (fault
+# injection, pressure spikes, straggler mitigation) the serving layer
+# asks a pluggable policy which tenant to pause.  Candidates are plain
+# tuples so the policy stays decoupled from the serving layer's Tenant
+# object: (tenant_id, qos_target_s, pages_held, tokens_served).
+# ---------------------------------------------------------------------------
+PreemptionCandidate = Tuple[str, Optional[float], int, int]
+
+
+class PreemptionPolicy(Protocol):
+    """Victim selection for tenant preemption."""
+
+    def select(self, candidates: Sequence[PreemptionCandidate]
+               ) -> Optional[str]:
+        """Return the tenant id to preempt, or None to decline."""
+        ...
+
+
+class QosPreemptionPolicy:
+    """QoS-aware victim selection: pause the tenant that hurts the SLO
+    picture least and frees the most.  Order of preference:
+
+      1. loosest QoS target first — a tenant with no target at all
+         (best-effort) is always preferred over any tenant with one;
+      2. among equals, the largest page reservation (frees the most
+         pool per preemption);
+      3. ties broken by tenant id for determinism.
+    """
+
+    name = "qos"
+
+    def select(self, candidates: Sequence[PreemptionCandidate]
+               ) -> Optional[str]:
+        if not candidates:
+            return None
+        def rank(c: PreemptionCandidate):
+            tid, qos, pages, _served = c
+            # None (best-effort) sorts loosest; otherwise larger target
+            # = looser SLO = better victim.
+            return (0 if qos is None else 1, -(qos or 0.0), -pages, tid)
+        return min(candidates, key=rank)[0]
+
+
+# ---------------------------------------------------------------------------
 class CamdnPolicy:
     """CaMDN(Full): Algorithm 1 dynamic allocation + LBM + timeouts,
     delegated to :class:`DynamicCacheAllocator`."""

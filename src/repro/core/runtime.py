@@ -37,6 +37,25 @@ from repro.core.policy import CachePolicy, CamdnPolicy, ExecutionPlan
 from repro.core.types import ModelGraph
 
 
+# ---------------------------------------------------------------------------
+# Tenant lifecycle states.  The runtime itself only distinguishes
+# RUNNING from PREEMPTED (a preempted task holds no pages and must not
+# be scheduled); the remaining states exist so the serving layer and the
+# fault-injection harness share one vocabulary for the admission state
+# machine: ADMITTED -> RUNNING -> (PREEMPTED -> RESUMED ->)* departed,
+# with SHED the terminal state for arrivals rejected by overload
+# admission control.
+# ---------------------------------------------------------------------------
+STATE_ADMITTED = "ADMITTED"
+STATE_RUNNING = "RUNNING"
+STATE_PREEMPTED = "PREEMPTED"
+STATE_RESUMED = "RESUMED"
+STATE_SHED = "SHED"
+
+TENANT_STATES = (STATE_ADMITTED, STATE_RUNNING, STATE_PREEMPTED,
+                 STATE_RESUMED, STATE_SHED)
+
+
 # The offline mapping phase is a pure function of (layer graph, mapper
 # config), and the benchmark harness instantiates the same handful of
 # model graphs in every one of dozens of sim runs — so the solved
@@ -121,6 +140,7 @@ class TenantTask:
         self.lbm_block: Optional[Tuple[int, int]] = None
         self.started_at: float = 0.0
         self.finished_at: Optional[float] = None
+        self.state: str = STATE_ADMITTED
         self.policy.attach(self)
 
     # ------------------------------------------------------------------
@@ -136,6 +156,9 @@ class TenantTask:
         return self.model.mapping.mcts[self.layer_idx]
 
     def begin_layer(self, now: float) -> Selection:
+        assert self.state != STATE_PREEMPTED, \
+            f"{self.id}: preempted task scheduled"
+        self.state = STATE_RUNNING
         self.selection = self.policy.select(self, now)
         return self.selection
 
@@ -166,6 +189,9 @@ class TenantTask:
         minus the policy calls (the batched epoch planner prices through
         :func:`repro.core.policy.price_layer_batch` and replays the
         policy's grant side effects itself)."""
+        assert self.state != STATE_PREEMPTED, \
+            f"{self.id}: preempted task scheduled"
+        self.state = STATE_RUNNING
         self.selection = selection
         if granted:
             base = len(self._held_pages)
@@ -208,6 +234,31 @@ class TenantTask:
         detaching from the policy (allocator profiles, quotas)."""
         self.release_pages()
         self.policy.detach(self)
+
+    # ------------------------------------------------------------------
+    def preempt(self) -> None:
+        """Pause the task: every held page returns to the pool and the
+        allocator forgets the tenant's profile (so survivors' grants can
+        grow into the freed space), but — unlike :meth:`depart` — the
+        task object stays alive so :meth:`resume` can re-attach it.
+        Only legal between inferences (``done`` or at layer 0): the
+        serving layer preempts at epoch boundaries, never mid-block."""
+        assert self.done or self.layer_idx == 0, \
+            f"{self.id}: preempt mid-block (layer {self.layer_idx})"
+        self.release_pages()
+        self.policy.detach(self)
+        self.selection = None
+        self.state = STATE_PREEMPTED
+
+    def resume(self) -> None:
+        """Undo :meth:`preempt`: re-attach to the policy (fresh profile
+        — page residency was surrendered, so the allocator restarts this
+        tenant's reuse history) and make the task schedulable again."""
+        assert self.state == STATE_PREEMPTED, f"{self.id}: not preempted"
+        self.policy.attach(self)
+        if self.done:
+            self.reset_for_next_inference()
+        self.state = STATE_RESUMED
 
     def reset_for_next_inference(self) -> None:
         """Re-arm the task for another inference of the same model."""

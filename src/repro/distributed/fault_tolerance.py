@@ -2,7 +2,9 @@
 re-shard, straggler detection, and a supervised train-loop wrapper.
 
 Design (scales past this single-host repo; everything here is exercised
-on the CPU mesh in tests/test_fault_tolerance.py):
+in tests/test_fault_tolerance.py, and the serving stack reuses
+:class:`StragglerPolicy` for epoch-duration straggler detection —
+``launch/serve.py`` arms it whenever a fault plan is installed):
 
 * Restart: the data pipeline is a pure function of (seed, step), and
   checkpoints store the step — a restarted job replays nothing and

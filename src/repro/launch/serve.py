@@ -91,6 +91,9 @@ import argparse
 import contextlib
 import dataclasses
 import math
+import os
+import shutil
+import tempfile
 import threading
 import time
 from collections import OrderedDict
@@ -107,22 +110,28 @@ from repro.core.cache import CacheConfig
 from repro.core.mapping import MapperConfig
 from repro.core.mct import MCT, ModelMapping
 from repro.core.plan import KernelPlan, lower_prefill_chunk
+from repro.checkpoint import checkpoint as ckpt
 from repro.core.policy import (KV_PRECISION_LADDER, CamdnPolicy,
-                               ReplicaAllocators, ReplicaControl,
-                               choose_kv_dtype, price_layer_batch,
-                               project_epoch_dram)
-from repro.core.runtime import TenantModel, TenantTask
+                               QosPreemptionPolicy, ReplicaAllocators,
+                               ReplicaControl, choose_kv_dtype,
+                               price_layer_batch, project_epoch_dram)
+from repro.core.runtime import (STATE_ADMITTED, STATE_PREEMPTED,
+                                STATE_RESUMED, STATE_RUNNING, STATE_SHED,
+                                TenantModel, TenantTask)
 from repro.core.types import GemmDims, LayerKind, LayerSpec, ModelGraph, \
     ceil_div, elem_bytes
 from repro.core.vmem import (LANE, PAGE_BYTES, VMEM_PAGES, fused_ffn_pages,
                              kv_row_bytes, lower_selection)
 from repro.distributed import sharding as shard
+from repro.distributed.fault_tolerance import StragglerPolicy
 from repro.models import model as M
 from repro.models.base import ArchConfig, get_arch
 from repro.models.ssm import CONV_K
 from repro.models.transformer import (init_caches, num_groups,
                                       seed_caches_from_prefix)
-from repro.sim.driver import FleetScenario, PoissonArrivals, TenantSpec
+from repro.sim.driver import (BackoffPolicy, FleetScenario, PoissonArrivals,
+                              TenantSpec)
+from repro.sim.faults import FaultEvent, FaultLog, FaultPlan
 
 
 def _elem_bytes(cfg: ArchConfig) -> int:
@@ -398,6 +407,14 @@ class Tenant:
     prefix_key: Optional[str] = None      # attached entry (detach on depart)
     dedup: Optional[Tuple[str, str]] = None   # (arch, params_key) when
     #                                           eligible to register/attach
+    # ---- fault tolerance (preempt / resume) -------------------------
+    state: str = STATE_ADMITTED           # admission state machine
+    preemptions: int = 0
+    preempted_wall: Optional[float] = None
+    resume_step: Optional[int] = None     # logical step to retry resume at
+    recovery_s: List[float] = dataclasses.field(default_factory=list)
+    ckpt_ref: Optional[Dict[str, Any]] = None   # snapshot handle while
+    #                                             PREEMPTED (mode + locator)
 
     @property
     def prefilling(self) -> bool:
@@ -444,7 +461,14 @@ class MultiTenantServer:
                  kv_dtype: str = "native",
                  batch_sched: bool = True,
                  lookahead: bool = False,
-                 aot_warmup: bool = False):
+                 aot_warmup: bool = False,
+                 faults: Optional[FaultPlan] = None,
+                 preemption_policy: Any = None,
+                 straggler_policy: Optional[StragglerPolicy] = None,
+                 ckpt_dir: Optional[str] = None,
+                 queue_limit: Optional[int] = None,
+                 queue_deadline_s: Optional[float] = None,
+                 backoff: Optional[BackoffPolicy] = None):
         assert admission in ("interleaved", "sequential"), admission
         assert kv_dtype in KV_PRECISION_LADDER + ("auto",), kv_dtype
         self.qos_targets = qos_targets or {}
@@ -546,7 +570,40 @@ class MultiTenantServer:
         self._aot_threads: List[threading.Thread] = []
         self._aot_compiled = 0
         self._aot_failed = 0
+        # per-site breakdown of AOT warmup failures (observability for
+        # the swallowed-exception paths in warm_aot)
+        self._aot_failed_enum = 0
+        self._aot_failed_compile = 0
         self._run_steps = 0
+        # ---- fault tolerance / overload admission -------------------
+        # faults: a logical-clock fault schedule consumed at epoch
+        # boundaries; None (the default) keeps the seed behaviour
+        # untouched.  The straggler detector only arms when a plan is
+        # installed — detection feeds on a *logical* per-epoch duration
+        # stream (1.0 per clean epoch, x factor per injected straggler
+        # epoch), so trips are deterministic on any host.
+        self.faults = faults
+        self.fault_log = FaultLog()
+        self.preemption_policy = preemption_policy or QosPreemptionPolicy()
+        self.straggler = straggler_policy or StragglerPolicy()
+        self._straggler_left = 0
+        self._straggler_factor = 1.0
+        self._ckpt_dir = ckpt_dir
+        self._owns_ckpt_dir = False
+        self._pressure_holds: List[List] = []   # [release_step, holder]
+        self._pressure_n = 0
+        # overload admission control: a bounded arrival queue
+        # (queue_limit) and a deadline-aware defer/degrade/shed ladder
+        # (queue_deadline_s + jittered backoff).  Both default OFF —
+        # admission then behaves exactly like the seed (immediate,
+        # best-effort degrading).
+        self.queue_limit = queue_limit
+        self.queue_deadline_s = queue_deadline_s
+        self.backoff = backoff or (BackoffPolicy()
+                                   if queue_deadline_s is not None else None)
+        self.shed: List[Dict[str, Any]] = []
+        self.deferrals = 0
+        self._defer_attempts: Dict[int, int] = {}
         # persistent tenant-stacked caches per bucketed arch group: the
         # stacked buffer stays stacked (and donated) across epochs while
         # the bucket holds, instead of an O(cache bytes) restack/slice
@@ -575,8 +632,14 @@ class MultiTenantServer:
         """Queue arrivals relative to the CURRENT logical clock (a
         benchmark warms the compile caches by replaying one scenario on
         the same server: arch/shape-keyed jit caches carry over, tenant
-        state does not)."""
+        state does not).  With a bounded queue (``queue_limit``),
+        arrivals past capacity are shed on the spot — backpressure at
+        the front door instead of unbounded buildup."""
         for spec in sorted(specs, key=lambda s: s.arrive_at):
+            if (self.queue_limit is not None
+                    and len(self._queue) >= self.queue_limit):
+                self._shed(spec, None, reason="queue_full")
+                continue
             step = self._clock + int(math.ceil(spec.arrive_at
                                                * self.steps_per_s))
             self._queue.append([spec, None, step])
@@ -890,12 +953,115 @@ class MultiTenantServer:
             if busy:
                 return
         while self._queue and self._due(self._queue[0]):
+            spec, due_wall, arrive_step = self._queue[0]
+            # malformed/oversized prompts (fault-injected or hostile)
+            # are shed at the door, never asserted on mid-admission
+            bad = self._malformed(spec)
+            if bad is not None:
+                self._queue.pop(0)
+                self._shed(spec, due_wall, reason=bad)
+                continue
+            if self.queue_deadline_s is not None:
+                # deadline measured from the ORIGINAL arrival step, not
+                # the latest retry step a deferral pushed item[2] to
+                orig = self._defer_attempts.get(id(spec),
+                                                (0, arrive_step))[1]
+                decision = self._overload_decision(spec, orig)
+                if decision == "defer":
+                    self._defer_head()
+                    continue
+                if decision == "shed":
+                    self._queue.pop(0)
+                    self._shed(spec, due_wall, reason="deadline")
+                    continue
             spec, due_wall, _ = self._queue.pop(0)
+            self._defer_attempts.pop(id(spec), None)
             # admission materializes params/caches — onboarding cost, not
             # per-epoch scheduling; timed apart so sched_wall stays honest
             a0 = time.perf_counter()
             self._admit_spec(spec, due_wall)
             self._admit_wall += time.perf_counter() - a0
+
+    def _malformed(self, spec: TenantSpec) -> Optional[str]:
+        """Reject-reason for a spec the server cannot possibly serve
+        (the fault harness injects these; admission must shed them
+        gracefully instead of tripping internal asserts)."""
+        if spec.prompt_len < 0:
+            return "negative_prompt"
+        if spec.prompt_len > _PROMPT_CAP and spec.prompt_seed is not None:
+            return "prompt_over_cap"
+        if spec.prompt_len > 0:
+            need = spec.prompt_len + (spec.n_inferences or 0)
+            if need > self.max_len:
+                return "oversized_prompt"
+        return None
+
+    def _overload_decision(self, spec: TenantSpec,
+                           arrive_step: int) -> str:
+        """Deadline-aware backpressure ladder for one due arrival:
+
+        * the pool can back the spec's KV reservation at the CHEAPEST
+          precision rung -> ``admit`` (the ladder walk / best-effort
+          shrink in _admit_spec handles the rest of the degradation);
+        * it can't, but the arrival's queue deadline still has slack ->
+          ``defer`` with jittered backoff;
+        * deadline blown -> ``shed`` if this is (one of) the
+          lowest-QoS arrivals waiting, else force-admit degraded — a
+          strict-SLO tenant is never starved behind best-effort ones."""
+        aid = (spec.model if isinstance(spec.model, str)
+               else spec.model.name)
+        cfg = get_arch(aid).reduced()
+        if spec.prompt_len <= 0:
+            return "admit"
+        floor_kv = ("native" if cfg.family in ("ssm", "encdec")
+                    or self.kv_dtype == "native"
+                    else (self.kv_dtype if self.kv_dtype != "auto"
+                          else KV_PRECISION_LADDER[-1]))
+        want = _kv_reserve_pages(cfg, self.batch, spec.prompt_len, floor_kv)
+        if want <= self.cache.free_pages:
+            return "admit"
+        deadline = max(1, int(math.ceil(self.queue_deadline_s
+                                        * self.steps_per_s)))
+        if self._clock - arrive_step < deadline:
+            return "defer"
+        loose = (lambda s: math.inf if s.qos_ms is None else s.qos_ms)
+        if loose(spec) >= max(loose(it[0]) for it in self._queue):
+            return "shed"
+        return "admit"
+
+    def _defer_head(self) -> None:
+        """Push the head arrival back by a jittered backoff delay (its
+        due_wall TTFT stamp survives — deferral time counts against
+        TTFT, exactly like a sequential-admission queue wait)."""
+        item = self._queue.pop(0)
+        spec = item[0]
+        att, orig = self._defer_attempts.get(id(spec), (0, item[2]))
+        self._defer_attempts[id(spec)] = (att + 1, orig)
+        delay = self.backoff.delay_s(att, key=orig)
+        item[2] = max(self._clock + 1,
+                      self._clock + int(math.ceil(delay * self.steps_per_s)))
+        self._queue.append(item)
+        self._queue.sort(key=lambda it: it[2])
+        self.deferrals += 1
+        self.fault_log.record(self._clock, "defer",
+                              model=str(getattr(spec.model, "name",
+                                                spec.model)),
+                              attempt=att + 1, retry_step=item[2])
+
+    def _shed(self, spec: TenantSpec, due_wall: Optional[float],
+              reason: str) -> None:
+        """Reject one arrival (overload or malformed): recorded, never
+        admitted — the terminal SHED state of the admission machine."""
+        self._defer_attempts.pop(id(spec), None)
+        aid = (spec.model if isinstance(spec.model, str)
+               else getattr(spec.model, "name", str(spec.model)))
+        self.shed.append({
+            "model": aid, "state": STATE_SHED, "reason": reason,
+            "step": self._clock, "qos_ms": spec.qos_ms,
+            "prompt_len": spec.prompt_len,
+            "waited_s": (time.time() - due_wall
+                         if due_wall is not None else None)})
+        self.fault_log.record(self._clock, "shed", model=aid, reason=reason)
 
     def _depart(self, t: Tenant) -> None:
         """Dynamic tenancy, serving side: the tenant leaves, reclaiming
@@ -913,6 +1079,13 @@ class MultiTenantServer:
             # page the PRODUCER contributed) stay resident for the next
             # warm arrival until pool pressure evicts them
             self.prefix.detach(t.prefix_key, t.tid)
+        if t.ckpt_ref is not None:
+            # departing while preempted: drop the parked checkpoint
+            if t.ckpt_ref.get("mode") == "snapshot":
+                shutil.rmtree(t.ckpt_ref["dir"], ignore_errors=True)
+            elif t.ckpt_ref.get("mode") == "prefix":
+                self.prefix.detach(t.ckpt_ref["key"], t.tid + "/preempt")
+            t.ckpt_ref = None
         self.cache.free(t.tid + "#kv", None)
         self._unstack_bucket(t.cfg.name)
         self._groups[t.cfg.name].remove(t)
@@ -931,6 +1104,252 @@ class MultiTenantServer:
             if (not t.departed and t.budget_left is not None
                     and t.budget_left <= 0 and not t.prefilling):
                 self._depart(t)
+
+    # --------------------------------------------- preempt / resume -----
+    def _ckpt_root(self) -> str:
+        if self._ckpt_dir is None:
+            self._ckpt_dir = tempfile.mkdtemp(prefix="repro-preempt-")
+            self._owns_ckpt_dir = True
+        return self._ckpt_dir
+
+    def _select_victim(self) -> Optional[Tenant]:
+        """Policy-pluggable QoS-aware victim selection over the tenants
+        that CAN be preempted: decoding (not mid-prefill — a prompt in
+        flight holds chunk state the snapshot does not cover), not
+        already preempted, not departed."""
+        cands = [(t.tid, t.qos_target,
+                  t.kv_reserved + t.task.held_pages, t.tokens_served)
+                 for t in self.tenants
+                 if not t.departed and t.state != STATE_PREEMPTED
+                 and t.token is not None and not t.prefilling]
+        tid = self.preemption_policy.select(cands)
+        if tid is None:
+            return None
+        return next(t for t in self.tenants if t.tid == tid)
+
+    def preempt_tenant(self, t: Tenant, resume_after_epochs: int = 1,
+                       reason: str = "fault") -> bool:
+        """Pause one decode tenant bit-preservingly: checkpoint its KV
+        caches + decode cursor, free every page it holds back into the
+        pool, and schedule a resume.  Two snapshot paths:
+
+        * **prefix re-seed** — the tenant sits exactly at the end of a
+          registered full-prompt prefix entry (index == prompt_len, no
+          decode step taken): the resident entry IS the checkpoint, so
+          nothing is copied; a refcount hold keeps it resident across
+          the preemption window.
+        * **checkpoint snapshot** — general case: the caches + feedback
+          token are host-gathered through checkpoint.save (exact bytes
+          for every float32/int8/fp8 leaf), restored on resume.
+
+        Resume is bit-identical to never having been preempted: decode
+        is a pure function of (caches, token, index), the cursor is
+        preserved, and the KV attention windows re-derive from it."""
+        if (t.departed or t.state == STATE_PREEMPTED or t.prefilling
+                or t.token is None):
+            return False
+        # the tenant may be holding its caches inside a stacked bucket
+        self._unstack_bucket(t.cfg.name)
+        ent = None
+        if t.dedup is not None and t.prompt is not None:
+            full_key = self.prefix.prefix_key(
+                t.dedup[0], t.dedup[1], t.prompt.tobytes())
+            ent = self.prefix.entries.get(full_key)
+        if (ent is not None and t.index == t.prompt_len
+                and ent.payload.get("token") is not None):
+            self.prefix.attach(ent.key, t.tid + "/preempt")
+            t.ckpt_ref = {"mode": "prefix", "key": ent.key}
+        else:
+            root = os.path.join(
+                self._ckpt_root(),
+                t.tid.replace("/", "_").replace(":", "_"))
+            ckpt.save(root, t.index,
+                      {"caches": t.caches, "token": t.token},
+                      extra={"index": t.index, "pf_pos": t.pf_pos})
+            t.ckpt_ref = {"mode": "snapshot", "dir": root,
+                          "step": t.index}
+        # surrender the device buffers and every modeled page: decode
+        # grants (task), the KV reservation, and the attached prefix
+        # chain refcounts — survivors' grants grow into the freed space
+        t.task.preempt()
+        if t.prefix_key is not None:
+            self.prefix.detach(t.prefix_key, t.tid)
+            t.prefix_key = None
+        self.cache.free(t.tid + "#kv", None)
+        t.caches = None
+        t.token = None
+        t.state = STATE_PREEMPTED
+        t.preemptions += 1
+        t.preempted_wall = time.time()
+        t.resume_step = (self._clock
+                         + max(1, resume_after_epochs) * self.epoch_len)
+        self.fault_log.record(self._clock, "preempt", tid=t.tid,
+                              mode=t.ckpt_ref["mode"], reason=reason,
+                              resume_step=t.resume_step)
+        return True
+
+    def _try_resume(self) -> None:
+        """Resume every preempted tenant whose resume step has passed —
+        called at epoch boundaries, before planning, so a resumed
+        tenant decodes in the same epoch it rejoins."""
+        for t in self.tenants:
+            if (not t.departed and t.state == STATE_PREEMPTED
+                    and t.resume_step is not None
+                    and self._clock >= t.resume_step):
+                self._resume_tenant(t)
+
+    def _resume_tenant(self, t: Tenant) -> bool:
+        """Rebuild a preempted tenant's device state bit-identically and
+        re-admit it to scheduling: re-reserve KV pages (best-effort,
+        like admission), restore caches + feedback token from the
+        snapshot, re-attach the allocator profile."""
+        ref = t.ckpt_ref
+        assert t.state == STATE_PREEMPTED and ref is not None, t.tid
+        want = t.kv_wanted
+        shared: List[int] = []
+        if ref["mode"] == "prefix":
+            ent = self.prefix.entries[ref["key"]]
+            self.prefix.attach(ref["key"], t.tid)
+            t.prefix_key = ref["key"]
+            shared = self.cache.share(self.prefix.chain_pages(ent),
+                                      t.tid + "#kv")
+            t.caches = self._put_caches(self._seed_fn(t.cfg, t.kv_dtype)(
+                ent.payload["snap"], prefix_len=ent.kv_len))
+            t.token = self._put_replicated(ent.payload["token"])
+            self.prefix.detach(ref["key"], t.tid + "/preempt")
+        else:
+            like = {"caches": jax.eval_shape(
+                        lambda: init_caches(t.params, t.cfg, self.batch,
+                                            self.max_len,
+                                            kv_dtype=t.kv_dtype)),
+                    "token": jax.ShapeDtypeStruct((self.batch, 1),
+                                                  jnp.int32)}
+            tree, _ = ckpt.restore(ref["dir"], like, step=ref["step"])
+            t.caches = self._put_caches(tree["caches"])
+            t.token = self._put_replicated(tree["token"])
+            shutil.rmtree(ref["dir"], ignore_errors=True)
+        priv = max(0, want - len(shared))
+        got = self.cache.alloc(t.tid + "#kv", priv)
+        if got is None:
+            got = self.cache.alloc(t.tid + "#kv",
+                                   min(priv, self.cache.free_pages))
+        t.kv_reserved = len(shared) + len(got or [])
+        t.ckpt_ref = None
+        t.resume_step = None
+        t.task.resume()
+        t.state = STATE_RESUMED
+        if t.preempted_wall is not None:
+            t.recovery_s.append(time.time() - t.preempted_wall)
+            t.preempted_wall = None
+        self.fault_log.record(self._clock, "resume", tid=t.tid,
+                              kv_reserved=t.kv_reserved)
+        return True
+
+    # --------------------------------------------- fault injection ------
+    def _apply_due_faults(self, steps: int) -> None:
+        """Epoch-boundary fault hook: release expired pressure holds,
+        then fire every due event of the installed plan."""
+        for h in list(self._pressure_holds):
+            if h[0] <= self._clock:
+                self.cache.free(h[1], None)
+                self._pressure_holds.remove(h)
+                self.fault_log.record(self._clock, "pressure_release",
+                                      holder=h[1])
+        if self.faults is None:
+            return
+        for e in self.faults.due(self._clock):
+            self.inject(e, steps)
+
+    def inject(self, e: FaultEvent, steps: int = 0) -> None:
+        """Apply one fault event NOW (the fleet driver forwards events
+        to the target replica through this entry point)."""
+        if e.kind == "pool_pressure":
+            holder = f"fault#p{self._pressure_n}"
+            self._pressure_n += 1
+            # allocate THROUGH the pool so the pressure hook fires —
+            # cold prefix entries get reclaimed exactly as they would
+            # under a real grant burst
+            got = self.cache.alloc(holder, e.pages)
+            if got is None:
+                got = self.cache.alloc(
+                    holder, min(e.pages, self.cache.free_pages))
+            self._pressure_holds.append(
+                [self._clock + max(1, e.hold_epochs) * self.epoch_len,
+                 holder])
+            self.fault_log.record(self._clock, "pool_pressure",
+                                  seized=len(got or []),
+                                  free_after=self.cache.free_pages)
+            if self.cache.free_pages == 0:
+                # spike emptied the pool outright: preempt one victim
+                # so co-tenants keep decoding instead of starving
+                v = self._select_victim()
+                if v is not None:
+                    self.preempt_tenant(v, e.hold_epochs,
+                                        reason="pool_pressure")
+        elif e.kind == "straggler":
+            self._straggler_left = max(self._straggler_left,
+                                       max(1, e.hold_epochs))
+            self._straggler_factor = e.factor
+            self.fault_log.record(self._clock, "straggler",
+                                  epochs=e.hold_epochs, factor=e.factor)
+        elif e.kind == "bad_prompt":
+            spec = e.spec
+            if spec is None:
+                aid = e.target if isinstance(e.target, str) else "yi-9b"
+                spec = TenantSpec(aid, prompt_len=4 * self.max_len,
+                                  n_inferences=2)
+            self.fault_log.record(self._clock, "bad_prompt",
+                                  prompt_len=spec.prompt_len)
+            self._queue.append([spec, None, self._clock])
+            self._queue.sort(key=lambda it: it[2])
+        elif e.kind == "preempt":
+            t = None
+            if e.target is not None:
+                t = next((x for x in self.tenants if x.tid == e.target),
+                         None)
+            if t is None:
+                t = self._select_victim()
+            if t is not None:
+                self.preempt_tenant(t, e.hold_epochs, reason="injected")
+        # replica_kill is fleet-level: a standalone server ignores it
+
+    def _observe_epoch(self) -> None:
+        """Feed the straggler detector one epoch observation.  Armed
+        only under an installed fault plan, and fed a LOGICAL duration
+        (1.0 per clean epoch, x factor while an injected straggler is
+        active) so detection and mitigation are deterministic.  A trip
+        preempts the policy-selected victim — shedding load off the
+        straggling replica — and resets the strike counter."""
+        if self.faults is None:
+            return
+        dt = 1.0
+        if self._straggler_left > 0:
+            self._straggler_left -= 1
+            dt = self._straggler_factor
+        if self.straggler.observe(len(self._device_walls), dt):
+            self.straggler.strikes = 0
+            v = self._select_victim()
+            self.fault_log.record(self._clock, "straggler_trip",
+                                  victim=v.tid if v else None)
+            if v is not None:
+                self.preempt_tenant(v, reason="straggler")
+
+    def _wake_steps(self) -> List[int]:
+        """Every future logical step that can create new work while the
+        current epoch is idle: queued arrivals, scheduled resumes,
+        pressure-hold releases, unfired fault events.  The idle
+        fast-forward jumps to the earliest of these instead of
+        terminating the run with tenants still preempted."""
+        wake = [it[2] for it in self._queue]
+        wake += [t.resume_step for t in self.tenants
+                 if not t.departed and t.state == STATE_PREEMPTED
+                 and t.resume_step is not None]
+        wake += [h[0] for h in self._pressure_holds]
+        if self.faults is not None:
+            nxt = self.faults.peek_step()
+            if nxt is not None:
+                wake.append(nxt)
+        return wake
 
     def _align_lbm_to_vmem(self, tm: TenantModel, cfg: ArchConfig,
                            seq_block: int) -> None:
@@ -1464,6 +1883,8 @@ class MultiTenantServer:
         path, preserving the exact sequencing of grants, downgrades, and
         pool-pressure side effects."""
         while True:
+            self._apply_due_faults(steps)
+            self._try_resume()
             self._admit_due(steps)
             self._process_departures()
             if not self.pipeline or self.admission == "sequential":
@@ -1532,10 +1953,15 @@ class MultiTenantServer:
                     work.append(("single", t, plan, k))
                     seen.add(t.tid)
             self._clock += self.epoch_len
-            if work or not self._queue:
+            if work:
                 return work
-            # idle gap before the next arrival: fast-forward the clock
-            self._clock = max(self._clock, self._queue[0][2])
+            # idle gap: fast-forward to the next wake-up source (queued
+            # arrival, scheduled resume, pressure-hold release, fault
+            # event) — a preempted tenant must never strand the run
+            wake = self._wake_steps()
+            if not wake:
+                return work
+            self._clock = max(self._clock, min(wake))
 
     # ------------------------------------------------------- execution --
     def _unstack_bucket(self, name: str) -> None:
@@ -1552,6 +1978,8 @@ class MultiTenantServer:
         t.tokens_served += self.batch * k
         t.epochs_served += 1
         t.run_steps += k
+        if t.state == STATE_ADMITTED:
+            t.state = STATE_RUNNING   # RESUMED stays visible in results
         if t.budget_left is not None:
             t.budget_left -= k
 
@@ -1746,8 +2174,14 @@ class MultiTenantServer:
         def warm():
             try:
                 keys = self._enumerate_epoch_keys(steps)
-            except Exception:     # torn read during tenancy churn: skip
+            except (AttributeError, IndexError, KeyError, RuntimeError,
+                    ValueError):
+                # torn read during tenancy churn (list/dict mutated under
+                # the enumeration walk, or a half-departed tenant's None
+                # fields): skip this warmup round.  Counted per-site so
+                # out["host"] makes the swallowed path observable.
                 self._aot_failed += 1
+                self._aot_failed_enum += 1
                 return
             for key in keys:
                 try:
@@ -1763,8 +2197,14 @@ class MultiTenantServer:
                         continue
                     entry.aot[sig] = entry.fallback.lower(*specs).compile()
                     self._aot_compiled += 1
-                except Exception:   # prediction miss: fall back lazily
+                except (IndexError, KeyError, RuntimeError, TypeError,
+                        ValueError):
+                    # prediction miss (group emptied under us, stale
+                    # plan, XLA lowering/compile rejection — jax wraps
+                    # backend failures in Value/Type/RuntimeError):
+                    # the runtime path compiles lazily on the miss
                     self._aot_failed += 1
+                    self._aot_failed_compile += 1
 
         th = threading.Thread(target=warm, name="aot-warm", daemon=True)
         th.start()
@@ -1823,6 +2263,7 @@ class MultiTenantServer:
             self._device_walls.append(time.perf_counter() - t0)
             self._epoch_compiles.append(
                 self._fused_jits.misses + self._prefill_jits.misses - m0)
+            self._observe_epoch()
 
     def _dispatch_epoch_inner(self, work: List[Tuple]) -> None:
         """Launch one epoch's work: the prefill chunks dispatch first
@@ -1981,15 +2422,17 @@ class MultiTenantServer:
         else:
             while True:
                 now = time.time() - t0   # once per round, not per tenant
+                self._apply_due_faults(steps)
+                self._try_resume()
                 self._admit_due(steps)
                 self._process_departures()
                 self._sequential_prefills_due(now)
                 runnable = [t for t in self.tenants
                             if self._decodable(t, steps)]
                 if not runnable:
-                    if self._queue:
-                        self._clock = max(self._clock + 1,
-                                          self._queue[0][2])
+                    wake = self._wake_steps()
+                    if wake:
+                        self._clock = max(self._clock + 1, min(wake))
                         continue
                     break
                 order = runnable
@@ -2035,6 +2478,9 @@ class MultiTenantServer:
                         "kv_dtype": t.kv_dtype,
                         "prefix_hit": t.prefix_hit,
                         "prefill_computed": t.pf_computed,
+                        "state": t.state,
+                        "preemptions": t.preemptions,
+                        "recovery_s": list(t.recovery_s),
                         # full decoded history [B, total_steps], fetched
                         # here (the loop itself never pulled a value)
                         "output": (np.concatenate(
@@ -2060,6 +2506,19 @@ class MultiTenantServer:
             "p95_ttft_s": (float(np.percentile(ttfts, 95)) if ttfts
                            else None),
             "host": self._host_stats(),
+            "overload": {
+                "deferrals": self.deferrals,
+                "shed": list(self.shed),
+                "shed_count": len(self.shed),
+                "queued": len(self._queue),
+            },
+            "faults": {
+                "counts": self.fault_log.counts(),
+                "log": list(self.fault_log.records),
+                "preemptions": sum(t.preemptions for t in self.tenants),
+                "recovery_s": [r for t in self.tenants
+                               for r in t.recovery_s],
+            },
         }
 
     def _host_stats(self) -> Dict[str, Any]:
@@ -2087,6 +2546,8 @@ class MultiTenantServer:
             "lookahead_adjusted": self._lookahead_adjusted,
             "aot_compiled": self._aot_compiled,
             "aot_failed": self._aot_failed,
+            "aot_failed_enumerate": self._aot_failed_enum,
+            "aot_failed_compile": self._aot_failed_compile,
             "aot_hits": sum(e.aot_hits for e in entries),
             "fallback_calls": sum(e.fallback_calls for e in entries),
             "jit_cache": {
@@ -2143,7 +2604,8 @@ class FleetServer:
                  arrivals: Optional[PoissonArrivals] = None,
                  prefill_chunk: int = 2 * LANE, steps_per_s: float = 1.0,
                  qos_targets: Optional[Dict[str, float]] = None,
-                 prefix_dedup: bool = False, kv_dtype: str = "native"):
+                 prefix_dedup: bool = False, kv_dtype: str = "native",
+                 faults: Optional[FaultPlan] = None):
         from repro.launch.mesh import make_serving_mesh, replica_submeshes
         if mesh is None:
             mesh = make_serving_mesh(n_replicas, tp=tp)
@@ -2171,6 +2633,13 @@ class FleetServer:
             for r in range(self.n_replicas)]
         self._clock = 0               # lockstep with every replica clock
         self._n_admitted = 0          # global admission index -> seeds
+        # fleet-level fault injection: replica_kill is handled here
+        # (failover re-routing); every other kind is forwarded to the
+        # target replica's own inject() entry point
+        self.faults = faults
+        self.fault_log = FaultLog()
+        self._dead: set = set()       # replica indices that have failed
+        self._moved: List[Dict[str, Any]] = []   # failover re-routes
         self.scenario = FleetScenario(
             self.n_replicas, [[] for _ in range(self.n_replicas)])
         self._util_samples: List[List[float]] = [
@@ -2236,7 +2705,9 @@ class FleetServer:
         tie-broken least-loaded, then fewest active tenants."""
         match = self._match_lens(spec)
         loads = [(-match[r], srv.load(), srv.active_count(), r)
-                 for r, srv in enumerate(self.replicas)]
+                 for r, srv in enumerate(self.replicas)
+                 if r not in self._dead]
+        assert loads, "no live replica to route to"
         _, _, _, r = min(loads)
         routed = dataclasses.replace(
             spec,
@@ -2257,6 +2728,86 @@ class FleetServer:
             spec, due_wall, _ = self._queue.pop(0)
             self._route(spec, due_wall)
 
+    # ----------------------------------------------------- fault paths --
+    def kill_replica(self, r: int) -> List[str]:
+        """Fail replica ``r`` at an epoch boundary: the router stops
+        offering it, its live tenants' *specs* (tid-pinned via the
+        global-admission seed) re-route by the normal prefix-affinity /
+        least-loaded rule onto survivors, and each moved tenant
+        re-prefills there — warm when the survivor's PrefixIndex still
+        holds the prompt prefix, cold otherwise.  The moved tenant
+        carries only its *remaining* decode budget, and its recovery
+        latency is the survivor's TTFT measured from the kill instant.
+
+        Returns the moved tids.  Killing the last live replica is
+        refused (logged, not raised): with no survivor there is no
+        failover story to exercise."""
+        if r in self._dead:
+            return []
+        if len(self._dead) + 1 >= self.n_replicas:
+            self.fault_log.record(self._clock, "replica_kill",
+                                  target=f"r{r}", skipped="last live replica")
+            return []
+        self._dead.add(r)
+        kill_wall = time.time()
+        srv = self.replicas[r]
+        by_tid: Dict[str, TenantSpec] = {}
+        for spec in self.scenario.per_replica[r]:
+            aid = (spec.model if isinstance(spec.model, str)
+                   else spec.model.name)
+            by_tid[f"t{spec.seed}:{aid}"] = spec
+        moved: List[str] = []
+        for t in list(srv.tenants):
+            if t.departed:
+                continue
+            left = t.budget_left       # None = unbounded resident tenant
+            spec = by_tid.get(t.tid)
+            # the chip is gone: reclaim the dead control stack's modeled
+            # pages and the real device buffers (results survive)
+            srv._depart(t)
+            if spec is None or (left is not None and left <= 0):
+                continue
+            respec = spec if left is None else dataclasses.replace(
+                spec, n_inferences=left)
+            r_new = self._route(respec, kill_wall)
+            moved.append(t.tid)
+            self._moved.append({"tid": t.tid, "from": f"r{r}",
+                                "to": f"r{r_new}", "step": self._clock})
+        self.fault_log.record(self._clock, "replica_kill",
+                              target=f"r{r}", moved=moved)
+        return moved
+
+    def _apply_fleet_faults(self, steps: int) -> None:
+        """Consume due fault events on the FLEET clock: handle
+        replica_kill here, forward everything else to the target
+        replica (by "rN" target, by owning replica for a tenant-id
+        preempt target, else the lowest-index live replica)."""
+        if self.faults is None:
+            return
+        live = lambda: sorted(set(range(self.n_replicas)) - self._dead)
+        for e in self.faults.due(self._clock):
+            if e.kind == "replica_kill":
+                tgt = e.target
+                rid = (int(tgt[1:]) if tgt and tgt.startswith("r")
+                       and tgt[1:].isdigit() else (live() or [None])[0])
+                if rid is not None:
+                    self.kill_replica(rid)
+                continue
+            rid = None
+            if e.target and e.target.startswith("r") \
+                    and e.target[1:].isdigit():
+                rid = int(e.target[1:])
+            elif e.target:   # tenant id: find the replica that owns it
+                for i in live():
+                    if any(t.tid == e.target and not t.departed
+                           for t in self.replicas[i].tenants):
+                        rid = i
+                        break
+            if rid is None:
+                rid = (live() or [None])[0]
+            if rid is not None and rid not in self._dead:
+                self.replicas[rid].inject(e, steps)
+
     def replica_scenarios(self) -> List[List[TenantSpec]]:
         """The routed specs per replica (seeds pinned to the global
         admission index, arrive_at rebased to the admitting clock):
@@ -2269,8 +2820,10 @@ class FleetServer:
         t0 = time.time()
         for srv in self.replicas:
             srv._begin_run(steps)
+        self._apply_fleet_faults(steps)
         self._route_due()
-        pendings = [srv._plan_epoch(0.0, steps) for srv in self.replicas]
+        pendings = [None if r in self._dead else srv._plan_epoch(0.0, steps)
+                    for r, srv in enumerate(self.replicas)]
         self._clock += self.epoch_len
         while any(pendings) or self._queue:
             # dispatch every replica's epoch back-to-back, all async:
@@ -2280,16 +2833,27 @@ class FleetServer:
                 if p:
                     srv._dispatch_epoch(p)
             for r, srv in enumerate(self.replicas):
-                self._util_samples[r].append(srv.page_utilization())
+                self._util_samples[r].append(
+                    0.0 if r in self._dead else srv.page_utilization())
             if not any(pendings) and self._queue:
                 nxt = self._queue[0][2]
+                if self.faults is not None:
+                    f = self.faults.peek_step()
+                    if f is not None and self._clock < f < nxt:
+                        nxt = f   # a fault lands in the idle gap first
                 if nxt > self._clock:   # fleet-wide idle gap: fast-forward
                     self._clock = nxt
                     for srv in self.replicas:
                         srv._clock = max(srv._clock, nxt)
+            # kills land HERE — after the dispatched epoch completed,
+            # before the next is planned — so every replica's tenants
+            # are at an epoch boundary when their chip disappears
+            self._apply_fleet_faults(steps)
             self._route_due()
             now = time.time() - t0
-            pendings = [srv._plan_epoch(now, steps) for srv in self.replicas]
+            pendings = [None if r in self._dead
+                        else srv._plan_epoch(now, steps)
+                        for r, srv in enumerate(self.replicas)]
             self._clock += self.epoch_len
         results = [srv._finish_run() for srv in self.replicas]
         return self._merge(results, time.time() - t0)
@@ -2300,15 +2864,22 @@ class FleetServer:
         replicas: List[Dict[str, Any]] = []
         ttfts: List[float] = []
         total = 0
-        for r, (srv, res) in enumerate(zip(self.replicas, results)):
-            for tid, info in res["tenants"].items():
+        # dead replicas merge FIRST so a failed-over tenant's tid lands
+        # on its survivor's entry (same tid on both servers: the dead
+        # one's partial record, the survivor's completed one)
+        order = sorted(range(self.n_replicas),
+                       key=lambda r: (0 if r in self._dead else 1, r))
+        for r in order:
+            for tid, info in results[r]["tenants"].items():
                 info = dict(info)
                 info["replica"] = f"r{r}"
                 tenants[tid] = info
+        for r, (srv, res) in enumerate(zip(self.replicas, results)):
             total += res["tokens_served"]
             util = self._util_samples[r]
             replicas.append({
                 "replica": f"r{r}",
+                "dead": r in self._dead,
                 "tokens_served": res["tokens_served"],
                 "dram_bytes": res["dram_bytes"],
                 "page_util_mean": float(np.mean(util)) if util else 0.0,
@@ -2317,8 +2888,19 @@ class FleetServer:
             ttfts += [t.ttft for t in srv.tenants
                       if t.ttft is not None and t.admitted_wall is not None
                       and t.admitted_wall >= srv._run_t0]
-        utils = [rep["page_util_mean"] for rep in replicas]
+        # balance over SURVIVORS: a dead chip's idle pool is a fault
+        # outcome, not a routing-imbalance signal
+        utils = [rep["page_util_mean"] for rep in replicas
+                 if not rep["dead"]]
         balance = min(utils) / max(utils) if utils and max(utils) > 0 else 1.0
+        # recovery latency: survivor TTFT clocked from the kill instant
+        # (admit_routed pinned due_wall = kill wall at re-route time)
+        recov: Dict[str, float] = {}
+        for m in self._moved:
+            info = tenants.get(m["tid"])
+            if info is not None and info.get("ttft_s") is not None \
+                    and info["replica"] == m["to"]:
+                recov[m["tid"]] = float(info["ttft_s"])
         return {
             "tenants": tenants,
             "mode": "fleet",
@@ -2334,6 +2916,19 @@ class FleetServer:
             "replicas": replicas,
             "routes": list(self.scenario.routes),
             "page_util_balance": balance,
+            "failover": {
+                "killed": sorted(f"r{r}" for r in self._dead),
+                "moved": list(self._moved),
+                "recovery_s": recov,
+                "recovery_p95_s": (float(np.percentile(
+                    list(recov.values()), 95)) if recov else None),
+            },
+            "faults": {
+                "counts": self.fault_log.counts(),
+                "log": list(self.fault_log.records),
+                "replica_counts": [res["faults"]["counts"]
+                                   for res in results],
+            },
         }
 
 

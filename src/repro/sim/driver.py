@@ -115,6 +115,27 @@ class PoissonArrivals:
 
 
 @dataclasses.dataclass
+class BackoffPolicy:
+    """Deterministic jittered exponential backoff for deferred
+    admissions.  When the serving layer's overload control *defers* an
+    arrival (bounded queue, pool can't back even the cheapest KV
+    reservation), the retry delay is ``base_s * factor**attempt`` capped
+    at ``max_s``, scaled down by up to ``jitter`` — the jitter draw is a
+    pure function of ``(seed, attempt, key)``, so replays are
+    bit-identical while co-arriving retries still de-synchronize."""
+    base_s: float = 1.0
+    factor: float = 2.0
+    max_s: float = 8.0
+    jitter: float = 0.5
+    seed: int = 0
+
+    def delay_s(self, attempt: int, key: int = 0) -> float:
+        d = min(self.base_s * self.factor ** max(0, attempt), self.max_s)
+        rng = random.Random(self.seed * 1_000_003 + attempt * 8191 + key)
+        return d * (1.0 - self.jitter * rng.random())
+
+
+@dataclasses.dataclass
 class SessionArrivals:
     """Session-replay workload: ``n_sessions`` chat sessions share
     ``n_prompts`` system prompts (session s uses prompt ``s % n_prompts``
@@ -188,6 +209,12 @@ class TaskResult:
     arrived_at: float = 0.0
     departed_at: Optional[float] = None
 
+    # Zero-completion contract: a tenant can legitimately finish a run
+    # with NO completed inferences (admitted then preempted and never
+    # resumed, or shed by overload control, or its replica was killed) —
+    # every stat below must degrade to a sentinel instead of dividing by
+    # zero, and every aggregator in SimResult filters on ``latencies`` /
+    # ``inferences`` so the inf sentinel never poisons a mean.
     @property
     def dram_per_inference(self) -> float:
         return self.traffic.dram_total / self.inferences if self.inferences else 0.0

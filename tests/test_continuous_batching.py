@@ -365,3 +365,35 @@ def test_poisson_arrivals_with_prompts_serve_end_to_end():
         assert info["tokens"] == 1 + 6
         assert info["ttft_s"] is not None
         assert sum(info["prefill_chunks"]) == 128
+
+
+def test_kv_stats_survive_preempt_resume():
+    """The per-tenant KV accounting (kv_wanted / kv_reserved / kv_dtype)
+    must survive a preempt -> resume round trip: preemption surrenders
+    the reservation, resume re-reserves best-effort against the pool it
+    finds — and the final stats record the RE-reserved state, not a
+    stale pre-preemption value or a zeroed one."""
+    from repro.launch.serve import MultiTenantServer
+    from repro.sim.driver import TenantSpec
+    from repro.sim.faults import FaultEvent, FaultPlan
+    specs = [TenantSpec("olmoe-1b-7b", arrive_at=0.0, prompt_len=256,
+                        n_inferences=12),
+             TenantSpec("olmoe-1b-7b", arrive_at=0.0, prompt_len=256,
+                        n_inferences=12)]
+    # step 16: past t1's chunked prefill (a preempt aimed at a tenant
+    # still consuming its prompt is a no-op by design)
+    plan = FaultPlan([FaultEvent(step=16, kind="preempt",
+                                 target="t1:olmoe-1b-7b", hold_epochs=1)])
+    srv = MultiTenantServer([], batch=1, max_len=512, total_pages=64,
+                            tenants=specs, epoch_len=8, faults=plan)
+    out = srv.run(steps=16)
+    kept = out["tenants"]["t0:olmoe-1b-7b"]
+    bounced = out["tenants"]["t1:olmoe-1b-7b"]
+    assert bounced["preemptions"] == 1 and kept["preemptions"] == 0
+    # the round trip preserved the accounting invariants
+    assert bounced["kv_wanted"] == kept["kv_wanted"] == 16
+    assert 0 < bounced["kv_reserved"] <= bounced["kv_wanted"]
+    assert bounced["kv_dtype"] == kept["kv_dtype"]
+    # and the tenant still completed its full budget
+    assert bounced["tokens"] == kept["tokens"] == 1 + 12
+    assert srv.cache.free_pages == srv.cache.config.num_pages

@@ -1,0 +1,212 @@
+"""Fault-tolerance primitives: straggler detection, supervised
+restart, fault plans, backoff, and zero-completion stat guards.
+
+These are the host-only building blocks the serving fault suite
+(tests/test_faults.py) composes: StragglerPolicy feeds the serving
+epoch observer, TrainSupervisor exercises the checkpoint/restart path
+that tenant preemption reuses through repro.checkpoint, FaultPlan /
+BackoffPolicy are the deterministic schedule and retry primitives, and
+TaskResult must degrade gracefully when a tenant completes nothing
+(preempted and never resumed, shed, or lost with its replica).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.distributed.fault_tolerance import (StragglerPolicy,
+                                               SupervisorConfig,
+                                               TrainSupervisor)
+from repro.sim.driver import BackoffPolicy, TaskResult
+from repro.sim.faults import FAULT_KINDS, FaultEvent, FaultLog, FaultPlan
+
+
+# ---------------------------------------------------------------------------
+# StragglerPolicy
+# ---------------------------------------------------------------------------
+def test_straggler_warmup_never_flags_first_step():
+    p = StragglerPolicy()
+    assert p.observe(0, 100.0) is False      # seeds the EWMA, no strike
+    assert p.strikes == 0
+
+
+def test_straggler_strikes_accumulate_and_reset():
+    p = StragglerPolicy(max_strikes=3)
+    p.observe(0, 1.0)
+    assert p.observe(1, 10.0) is False and p.strikes == 1
+    assert p.observe(2, 1.0) is False and p.strikes == 0   # clean resets
+    assert p.events, "slow step recorded even when strikes reset"
+
+
+def test_straggler_clamped_ewma_still_trips_at_factor_8():
+    """The serving fault injector feeds a LOGICAL duration stream (1.0
+    clean, ``factor`` while a straggler fault holds).  The EWMA update
+    clamps slow observations at threshold x EWMA, so the baseline creeps
+    up during a strike run: factor 4.0 escapes on the 3rd strike, the
+    FaultEvent default of 8.0 does not — this test pins that contract."""
+    def trips(factor):
+        p = StragglerPolicy()          # alpha .2, threshold 2.5, strikes 3
+        for s in range(5):
+            p.observe(s, 1.0)
+        for s in range(5, 10):
+            if p.observe(s, factor):
+                return True
+        return False
+
+    assert not trips(4.0)
+    assert trips(8.0)
+    assert trips(FaultEvent(step=0, kind="straggler").factor)
+
+
+def test_straggler_slow_steps_do_not_poison_baseline():
+    p = StragglerPolicy()
+    p.observe(0, 1.0)
+    p.observe(1, 100.0)
+    # clamped update: EWMA moved toward threshold*EWMA, not toward 100
+    assert p.ewma <= 1.0 * (1 - p.ewma_alpha) + p.ewma_alpha * 2.5 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# TrainSupervisor: crash containment + checkpoint/restart
+# ---------------------------------------------------------------------------
+def _counting_step(crash_at=(), crashed=None):
+    crashed = crashed if crashed is not None else set()
+
+    def step_fn(params, opt, batch):
+        s = int(params["step"])
+        if s in crash_at and s not in crashed:
+            crashed.add(s)
+            raise RuntimeError(f"injected crash at step {s}")
+        return {"step": params["step"] + 1}, opt, {"loss": float(s)}
+
+    return step_fn
+
+
+def test_supervisor_restores_and_completes(tmp_path):
+    cfg = SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                           async_save=False)
+    sup = TrainSupervisor(cfg)
+    step_fn = _counting_step(crash_at={5})
+    params, opt, step = sup.run(
+        step_fn, ({"step": np.zeros(())}, {}), lambda s: {}, num_steps=8)
+    assert step == 8
+    assert int(params["step"]) == 8
+    assert sup.restarts == 1
+    # restart resumed from the step-4 checkpoint, not from zero
+    tree, extra = ckpt.restore(str(tmp_path), {"params": params, "opt": {}})
+    assert int(extra["step"]) == 8
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    cfg = SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                           max_restarts=1, async_save=False)
+    sup = TrainSupervisor(cfg)
+
+    def always_crash(params, opt, batch):
+        raise RuntimeError("hard fault")
+
+    # seed a checkpoint so restore has something to find
+    sup.save(0, {"step": np.zeros(())}, {})
+    with pytest.raises(RuntimeError, match="hard fault"):
+        sup.run(always_crash, ({"step": np.zeros(())}, {}),
+                lambda s: {}, num_steps=4)
+    assert sup.restarts == 2   # 1 allowed restart + the raising attempt
+
+
+def test_checkpoint_roundtrip_is_exact(tmp_path):
+    """The preemption snapshot path relies on save/restore being exact
+    bytes for every leaf (float32 and int8 alike)."""
+    tree = {"kv": np.arange(24, dtype=np.float32).reshape(2, 3, 4) / 7.0,
+            "q": (np.arange(12, dtype=np.int8) - 5).reshape(3, 4),
+            "tok": np.array([[3], [11]], np.int32)}
+    ckpt.save(str(tmp_path), 7, tree, extra={"index": 7})
+    back, extra = ckpt.restore(str(tmp_path), tree, step=7)
+    assert extra["index"] == 7
+    for k in tree:
+        got = np.asarray(back[k])
+        assert got.dtype == tree[k].dtype
+        assert got.tobytes() == tree[k].tobytes(), k
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultEvent / FaultLog
+# ---------------------------------------------------------------------------
+def test_fault_event_validates():
+    with pytest.raises(AssertionError):
+        FaultEvent(step=0, kind="meteor_strike")
+    with pytest.raises(AssertionError):
+        FaultEvent(step=-1, kind="preempt")
+
+
+def test_fault_plan_orders_and_consumes():
+    plan = FaultPlan([FaultEvent(step=8, kind="preempt"),
+                      FaultEvent(step=4, kind="straggler"),
+                      FaultEvent(step=4, kind="pool_pressure", pages=4)])
+    assert plan.peek_step() == 4
+    due = plan.due(4)
+    # same-step events fire in FAULT_KINDS rank order, deterministically
+    assert [e.kind for e in due] == ["pool_pressure", "straggler"]
+    assert plan.due(4) == []            # consumed
+    assert plan.peek_step() == 8
+    assert not plan.exhausted
+    assert [e.kind for e in plan.due(100)] == ["preempt"]
+    assert plan.exhausted
+    plan.reset()
+    assert plan.peek_step() == 4
+
+
+def test_seeded_plan_is_deterministic():
+    a = FaultPlan.seeded(seed=3, horizon=64, n_events=5, n_replicas=2,
+                         kinds=FAULT_KINDS)
+    b = FaultPlan.seeded(seed=3, horizon=64, n_events=5, n_replicas=2,
+                         kinds=FAULT_KINDS)
+    assert [(e.step, e.kind, e.target) for e in a.events] \
+        == [(e.step, e.kind, e.target) for e in b.events]
+    c = FaultPlan.seeded(seed=4, horizon=64, n_events=5, n_replicas=2,
+                         kinds=FAULT_KINDS)
+    assert [(e.step, e.kind, e.target) for e in a.events] \
+        != [(e.step, e.kind, e.target) for e in c.events]
+    for e in a.events:
+        assert 0 < e.step < 64 and e.step % 8 == 0
+
+
+def test_fault_log_counts_and_filters():
+    log = FaultLog()
+    log.record(4, "preempt", tid="t0")
+    log.record(8, "preempt", tid="t1")
+    log.record(8, "resume", tid="t0")
+    assert log.counts() == {"preempt": 2, "resume": 1}
+    assert [r["tid"] for r in log.of_kind("preempt")] == ["t0", "t1"]
+
+
+# ---------------------------------------------------------------------------
+# BackoffPolicy
+# ---------------------------------------------------------------------------
+def test_backoff_deterministic_bounded_and_jittered():
+    b = BackoffPolicy(base_s=1.0, factor=2.0, max_s=8.0, jitter=0.5, seed=7)
+    delays = [b.delay_s(a, key=42) for a in range(6)]
+    assert delays == [b.delay_s(a, key=42) for a in range(6)]   # replayable
+    for a, d in enumerate(delays):
+        cap = min(1.0 * 2.0 ** a, 8.0)
+        assert cap * 0.5 <= d <= cap                            # jitter band
+    # different keys (arrival identities) decorrelate, same seed
+    assert b.delay_s(3, key=1) != b.delay_s(3, key=2)
+    assert BackoffPolicy(seed=1).delay_s(2) != BackoffPolicy(seed=2).delay_s(2)
+
+
+# ---------------------------------------------------------------------------
+# TaskResult zero-completion guards
+# ---------------------------------------------------------------------------
+def test_task_result_survives_zero_completions():
+    t = TaskResult("t0", "yi-9b", qos_ms=50.0)
+    assert t.avg_latency == math.inf
+    assert t.sla_rate == 0.0
+    assert t.dram_per_inference == 0.0
+
+
+def test_task_result_normal_path_unaffected():
+    t = TaskResult("t0", "yi-9b", qos_ms=50.0,
+                   latencies=[0.1, 0.3], deadline_met=1, inferences=2)
+    assert t.avg_latency == pytest.approx(0.2)
+    assert t.sla_rate == 0.5
